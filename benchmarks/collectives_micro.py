@@ -1,0 +1,40 @@
+"""Paper Figs 12/13: AllReduce latency vs message size; Barrier vs world.
+
+Model curves from the calibrated direct channel + REAL single-process
+lax-collective timings (world=1 on this host) as the measured anchor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import netsim
+
+SIZES = [8, 64, 512, 4096, 32768, 262144, 1048576]
+PAPER_BARRIER = {2: 0.9, 8: 2.7, 32: 7.0}
+
+
+def main(report=print) -> list[tuple]:
+    rows = []
+    for size in SIZES:
+        t = netsim.collective_time(netsim.LAMBDA_DIRECT, "allreduce", 32, size)
+        rows.append((f"allreduce_fig12/{size}B@32", t * 1e6,
+                     f"model={t*1e3:.2f}ms (paper ~13ms, flat)"))
+    for w in (2, 4, 8, 16, 32, 64):
+        t = netsim.collective_time(netsim.LAMBDA_DIRECT, "barrier", w, 0)
+        pub = PAPER_BARRIER.get(w)
+        rows.append((f"barrier_fig13/w{w}", t * 1e6,
+                     f"model={t*1e3:.2f}ms" + (f" paper={pub}ms" if pub else "")))
+    # real measured psum on this host (anchor; world=1 device)
+    x = jnp.ones((1 << 16,), jnp.float32)
+    t = common.time_call(jax.jit(lambda x: x.sum()), x)
+    rows.append(("allreduce_local/host_reduce_256KB", t * 1e6, "measured local reduce"))
+    for r in rows:
+        report(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Fig 10 + contribution C4: Join over direct TCP vs Redis vs S3.
+
+Runs the REAL distributed join through all three Communicator backends
+(identical results — semantics tested in test_dataframe) and prices the
+exchanges with the calibrated channel models at the paper's scale.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import make_communicator, netsim
+from repro.dataframe import Table, ops_dist
+
+ROWS_PER_WORKER = int(9.1e6)
+LOCAL10_S = 28.8  # paper-anchored 32-node local phase (Table II lambda base)
+
+
+def measured_substrate_times(world: int = 4, rows: int = 4096) -> dict:
+    """Real sim_join through each backend: identical outputs, priced comm."""
+    rng = np.random.default_rng(0)
+    keys = rng.permutation(rows).astype(np.int32)
+    vals = rng.integers(0, 100, rows).astype(np.int32)
+    per = rows // world
+    out = {}
+    for env in ("direct", "redis", "s3"):
+        tables = [
+            Table.from_dict({"k": keys[i*per:(i+1)*per], "v": vals[i*per:(i+1)*per]},
+                            capacity=per * 2)
+            for i in range(world)
+        ]
+        rtables = [
+            Table.from_dict({"k": keys[i*per:(i+1)*per], "w": vals[i*per:(i+1)*per]},
+                            capacity=per * 2)
+            for i in range(world)
+        ]
+        comm = make_communicator(world, env)
+        res = ops_dist.sim_join(tables, rtables, "k", comm)
+        total = sum(int(t.count) for t in res)
+        out[env] = {"rows_joined": total, "comm_s": comm.comm_time_s,
+                    "bytes_on_wire": comm.bytes_on_wire}
+    return out
+
+
+def fig10_model(world: int = 32) -> dict:
+    per_rank = ROWS_PER_WORKER * 2 * 16
+    out = {}
+    for env, ch, init in (("direct", netsim.LAMBDA_DIRECT, 31.5),
+                          ("redis", netsim.REDIS_STAGED, 1.0),
+                          ("s3", netsim.S3_STAGED, 1.0)):
+        comm = sum(
+            netsim.collective_time(ch, "alltoallv", world, per_rank)
+            + netsim.collective_time(ch, "barrier", world, 0)
+            for _ in range(common.ITERATIONS)
+        )
+        out[env] = init + LOCAL10_S + comm
+    return out
+
+
+def main(report=print) -> list[tuple]:
+    rows = []
+    meas = measured_substrate_times()
+    for env, m in meas.items():
+        rows.append((f"substrate_real/{env}", m["comm_s"] * 1e6,
+                     f"{m['rows_joined']} rows joined, {m['bytes_on_wire']} wire bytes"))
+    model = fig10_model()
+    paper = {"direct": 60.0, "redis": 255.0, "s3": 455.0}
+    for env, t in model.items():
+        rows.append((f"substrate_fig10/{env}@32", t * 1e6,
+                     f"model={t:.0f}s paper~{paper[env]:.0f}s"))
+    ratio = (model["s3"] - LOCAL10_S - 1) / (model["direct"] - LOCAL10_S - 31.5)
+    rows.append(("substrate_fig10/comm_ratio_s3_vs_direct", ratio * 1e6,
+                 f"{ratio:.0f}x comm latency (paper claim: 10-100x)"))
+    for r in rows:
+        report(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Figs 15/16 + contribution C3: the serverless cost model."""
+
+from __future__ import annotations
+
+from repro.core import cost_model as cm
+
+
+def main(report=print) -> list[tuple]:
+    rows = []
+    for w in (2, 4, 8, 16, 32):
+        for ch in ("direct", "redis", "s3"):
+            jc = cm.join_cost(w, channel=ch)
+            rows.append((f"cost/join_{ch}/w{w}", jc.total * 1e6,
+                         f"${jc.total:.4f} (init ${jc.init_cost:.4f} compute "
+                         f"${jc.compute_cost:.4f} orch ${jc.orchestration_cost:.4f})"))
+    nat = 32 * 10 * 31.5 * cm.LAMBDA_USD_PER_GB_S
+    rows.append(("cost/nat_phase@32", nat * 1e6, f"${nat:.3f} (paper: $0.17)"))
+    redis = cm.join_cost(32, channel="redis").total
+    s3 = cm.join_cost(32, channel="s3").total
+    rows.append(("cost/join_redis@32", redis * 1e6, f"${redis:.4f} (paper: $0.032)"))
+    rows.append(("cost/join_s3@32", s3 * 1e6, f"${s3:.4f} (paper: $0.150, 4.7x)"))
+    rows.append(("cost/s3_vs_redis_ratio", s3 / redis * 1e6, f"{s3/redis:.1f}x (paper 4.7x)"))
+    camp = cm.revision_campaign_cost()
+    rows.append(("cost/campaign_120_runs", camp * 1e6, f"${camp:.2f} (paper: $3.25)"))
+    be = cm.break_even_utilization(32, 10.0, 60.0)
+    rows.append(("cost/break_even_utilization", be * 1e6,
+                 f"EC2 cheaper only above {be*100:.0f}% busy (bursty => serverless)"))
+    for r in rows:
+        report(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Measured single-host throughput of the framework's data operators
+(the 'real execution' anchor for the scaling models)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.dataframe import ops_local
+from repro.dataframe.partition import build_partition_payload, hash_columns
+
+
+def main(report=print) -> list[tuple]:
+    rows = []
+    for n in (10_000, 100_000):
+        left, right = common.gen_join_tables(n)
+        t = common.time_call(jax.jit(lambda l, r: ops_local.join_unique(l, r, "k").count), left, right)
+        rows.append((f"local/join_unique/{n}", t * 1e6, f"{n/t/1e6:.2f} Mrows/s"))
+        t = common.time_call(jax.jit(lambda l: hash_columns(l, ["k"])), left)
+        rows.append((f"local/hash/{n}", t * 1e6, f"{n/t/1e6:.1f} Mrows/s"))
+        t = common.time_call(
+            jax.jit(lambda l: build_partition_payload(l, 16, ["k"])[1]), left)
+        rows.append((f"local/partition16/{n}", t * 1e6, f"{n/t/1e6:.2f} Mrows/s"))
+        t = common.measure_local_groupby_seconds(n)
+        rows.append((f"local/groupby_sum/{n}", t * 1e6, f"{n/t/1e6:.2f} Mrows/s"))
+    for r in rows:
+        report(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§Roofline reader: per (arch x shape x mesh) terms from the dry-run
+artifacts (deliverable (g)).  Run `python -m repro.launch.dryrun --all`
+first; this prints the table EXPERIMENTS.md embeds."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str = "16x16", variant: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}*.json")):
+        d = json.loads(f.read_text())
+        if variant is None and d.get("variant", "baseline") != "baseline":
+            continue
+        if variant is not None and d.get("variant") != variant:
+            continue
+        recs.append(d)
+    return recs
+
+
+def main(report=print) -> list[tuple]:
+    rows = []
+    for d in load():
+        tag = f"{d['arch']}/{d['shape']}"
+        if d["status"] == "skipped":
+            rows.append((f"roofline/{tag}", 0.0, f"SKIP: {d['reason']}"))
+            continue
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((
+            f"roofline/{tag}",
+            bound * 1e6,
+            f"compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
+            f"collective={r['collective_s']*1e3:.1f}ms dom={r['dominant']} "
+            f"useful={r['useful_compute_ratio']:.2f} frac={r['roofline_fraction']:.3f} "
+            f"mem/dev={d['memory_analysis']['peak_bytes_per_device']/2**30:.1f}GiB",
+        ))
+    for r in rows:
+        report(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure (deliverable (d)).
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+
+  local_ops          measured operator throughput on this host
+  scaling_join       Tables II/III/IV + Figs 8/9 (the 6.5% claim)
+  comm_substrates    Fig 10 (direct vs redis vs s3, 10-100x)
+  groupby_scaling    Fig 11 (combiner optimization, 1.35x)
+  collectives_micro  Figs 12/13 (allreduce/barrier latency)
+  time_composition   Fig 14 (init/compute/comm breakdown)
+  cost_analysis      Figs 15/16 ($0.17 NAT, $0.032 redis join, $3.25 campaign)
+  roofline           §Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        collectives_micro,
+        comm_substrates,
+        cost_analysis,
+        groupby_scaling,
+        local_ops,
+        roofline,
+        scaling_join,
+        time_composition,
+    )
+
+    modules = [
+        ("local_ops", local_ops),
+        ("scaling_join", scaling_join),
+        ("comm_substrates", comm_substrates),
+        ("groupby_scaling", groupby_scaling),
+        ("collectives_micro", collectives_micro),
+        ("time_composition", time_composition),
+        ("cost_analysis", cost_analysis),
+        ("roofline", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        mod.main(report=print)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

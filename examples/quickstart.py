@@ -1,0 +1,66 @@
+"""Quickstart: the distributed dataframe + serverless communicator in 60 s.
+
+Runs the paper's core operation — a hash-shuffled distributed join — through
+all three communication substrates, showing identical results with very
+different priced communication (contribution C4), then a groupby with the
+combiner optimization (Fig 11).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import make_communicator
+from repro.dataframe import Table, ops_dist
+
+WORLD, ROWS = 4, 4096
+
+
+def shard(cols: dict, world: int, cap: int) -> list[Table]:
+    per = len(next(iter(cols.values()))) // world
+    return [
+        Table.from_dict({k: v[i * per : (i + 1) * per] for k, v in cols.items()},
+                        capacity=cap)
+        for i in range(world)
+    ]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    orders = {
+        "order_id": rng.permutation(ROWS).astype(np.int32),
+        "amount": rng.integers(1, 500, ROWS).astype(np.int32),
+    }
+    users = {
+        "order_id": rng.permutation(ROWS).astype(np.int32)[: ROWS // 2],
+        "user": rng.integers(0, 50, ROWS // 2).astype(np.int32),
+    }
+
+    print(f"distributed join: {ROWS} orders x {ROWS//2} users over {WORLD} workers")
+    results = {}
+    for env in ("direct", "redis", "s3"):
+        comm = make_communicator(WORLD, env)
+        out = ops_dist.sim_join(
+            shard(orders, WORLD, ROWS), shard(users, WORLD, ROWS), "order_id", comm
+        )
+        n = sum(int(t.count) for t in out)
+        results[env] = n
+        print(f"  {env:7s}: {n} rows joined | modeled comm {comm.comm_time_s*1e3:8.2f} ms"
+              f" | {comm.bytes_on_wire/1e6:.2f} MB on wire")
+    assert len(set(results.values())) == 1, "substrates must agree"
+
+    print("\ndistributed groupby (sum amount per user) with combiner:")
+    joined_cols = {
+        "user": rng.integers(0, 50, ROWS).astype(np.int32),
+        "amount": rng.integers(1, 500, ROWS).astype(np.int32),
+    }
+    for combine in (False, True):
+        comm = make_communicator(WORLD, "direct")
+        ops_dist.sim_groupby(shard(joined_cols, WORLD, ROWS), "user",
+                             {"amount": "sum"}, comm, combine=combine)
+        print(f"  combiner={combine!s:5s}: {comm.bytes_on_wire/1e3:8.1f} KB shuffled")
+    print("\nOK — same API, any substrate, combiner shrinks the wire (paper §IV-C).")
+
+
+if __name__ == "__main__":
+    main()

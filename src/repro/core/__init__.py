@@ -1,0 +1,10 @@
+"""Core: the paper's contribution — serverless communicator, BSP runtime,
+NAT-traversal control plane, network/cost models."""
+
+from repro.core.communicator import (  # noqa: F401
+    CollectiveKind,
+    CommEvent,
+    Communicator,
+    make_communicator,
+)
+from repro.core.bsp import BSPRuntime, RunReport, SuperstepReport, WorkerFailure  # noqa: F401

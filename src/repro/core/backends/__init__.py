@@ -1,0 +1,10 @@
+"""Communicator backends.
+
+- ``direct``   : the production path — jax.lax collectives over named mesh
+                 axes (the TPU analogue of NAT hole-punched direct TCP).
+- ``mediated`` : redis / s3 store-staged backends for the paper's substrate
+                 comparison (simulation pricing + an SPMD emulation whose HLO
+                 demonstrates the extra bytes structurally).
+"""
+
+from repro.core.backends import direct, mediated  # noqa: F401

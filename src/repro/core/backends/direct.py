@@ -1,0 +1,109 @@
+"""Direct-communication backend: the SPMD surface of the communicator.
+
+Inside ``shard_map`` over a named mesh axis, these wrappers provide the same
+collective vocabulary as the simulation :class:`~repro.core.communicator.
+Communicator`, lowered to ``jax.lax`` primitives — i.e. direct chip-to-chip
+ICI transfers, the TPU-native analogue of the paper's NAT hole-punched TCP.
+
+The variable-length collectives follow the paper's FMI-extension structure:
+a fixed-size count exchange first, then a fixed-capacity payload exchange
+with masking — XLA requires static shapes, exactly as FMI's wire protocol
+requires pre-negotiated buffer sizes.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def axis_index(axis: str | Sequence[str]):
+    return lax.axis_index(axis)
+
+
+def axis_size(axis: str | Sequence[str]) -> int:
+    return lax.axis_size(axis)
+
+
+def barrier(axis: str | Sequence[str]) -> jax.Array:
+    """Optimization barrier realized as a zero-payload psum (all ranks must
+    arrive before any can observe the result)."""
+    return lax.psum(jnp.zeros((), jnp.int32), axis)
+
+
+def allreduce(x: jax.Array, axis: str | Sequence[str]) -> jax.Array:
+    return lax.psum(x, axis)
+
+
+def allreduce_mean(x: jax.Array, axis: str | Sequence[str]) -> jax.Array:
+    return lax.pmean(x, axis)
+
+
+def allreduce_max(x: jax.Array, axis: str | Sequence[str]) -> jax.Array:
+    return lax.pmax(x, axis)
+
+
+def reduce_scatter(x: jax.Array, axis: str, *, dim: int = 0) -> jax.Array:
+    return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def allgather(x: jax.Array, axis: str, *, dim: int = 0) -> jax.Array:
+    return lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def alltoall(x: jax.Array, axis: str, *, split_dim: int = 0, concat_dim: int = 0) -> jax.Array:
+    """Fixed-capacity all-to-all: rank r's split s goes to rank s."""
+    return lax.all_to_all(x, axis, split_axis=split_dim, concat_axis=concat_dim, tiled=True)
+
+
+def bcast(x: jax.Array, axis: str, *, root: int = 0) -> jax.Array:
+    """Broadcast root's shard to all ranks along `axis`."""
+    full = lax.all_gather(x, axis, axis=0, tiled=False)
+    return full[root]
+
+
+def ppermute(x: jax.Array, axis: str, perm: list[tuple[int, int]]) -> jax.Array:
+    return lax.ppermute(x, axis, perm)
+
+
+def send_recv_ring(x: jax.Array, axis: str, *, shift: int = 1) -> jax.Array:
+    """Point-to-point ring shift (the send/recv analogue under SPMD)."""
+    n = lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return lax.ppermute(x, axis, perm)
+
+
+def alltoallv_counts(counts: jax.Array, axis: str) -> jax.Array:
+    """Phase-1 of alltoallv: exchange per-destination valid counts ([P] -> [P])."""
+    return lax.all_to_all(
+        counts.reshape(-1, 1), axis, split_axis=0, concat_axis=0, tiled=False
+    ).reshape(-1)
+
+
+def alltoallv(
+    payload: jax.Array,
+    counts: jax.Array,
+    axis: str,
+) -> tuple[jax.Array, jax.Array]:
+    """Variable-length all-to-all with fixed capacity (the shuffle primitive).
+
+    Args:
+      payload: ``[P, cap, ...]`` — rank-local buffer; slot ``d`` holds the rows
+        destined for rank ``d``, valid in ``[:counts[d]]``, rest is padding.
+      counts:  ``[P]`` int32 — rows valid per destination slot.
+      axis:    mesh axis name of size P.
+
+    Returns:
+      (recv_payload ``[P, cap, ...]``, recv_counts ``[P]``) — slot ``s`` of the
+      result holds what rank ``s`` sent to this rank, with its valid count.
+
+    Two-phase structure per the paper's FMI extension: counts exchange
+    (tiny alltoall) then fixed-capacity payload exchange; masking replaces
+    ragged buffers.
+    """
+    recv_counts = alltoallv_counts(counts, axis)
+    recv = lax.all_to_all(payload, axis, split_axis=0, concat_axis=0, tiled=True)
+    return recv, recv_counts

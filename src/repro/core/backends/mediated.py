@@ -1,0 +1,65 @@
+"""Store-mediated backends (Redis / S3) — the paper's comparison substrates.
+
+Two roles:
+
+1. **Simulation pricing**: `redis_communicator` / `s3_communicator` are
+   :class:`Communicator` instances whose channel models carry the measured
+   constants from paper Fig 10/15/16 (PUT+GET per exchange, shared store NIC,
+   per-object latency).  Used by the substrate-comparison benchmark.
+
+2. **SPMD emulation** (`staged_all_to_all` / `staged_allreduce`): the same
+   exchange expressed through a *staging hop* in XLA — every rank's payload is
+   first gathered to a root ("the store"), then redistributed.  Compiling this
+   and counting collective bytes shows structurally why mediated exchange
+   loses: total bytes scale with P x payload through one point instead of
+   payload/P per link.  This is the HLO-level rendition of the paper's
+   10-100x result and is used by the roofline/substrate analysis, never by
+   production paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import netsim
+from repro.core.communicator import Communicator
+
+
+def redis_communicator(world_size: int) -> Communicator:
+    return Communicator(world_size, netsim.REDIS_STAGED)
+
+
+def s3_communicator(world_size: int) -> Communicator:
+    return Communicator(world_size, netsim.S3_STAGED)
+
+
+# ---------------------------------------------------------------------------
+# SPMD emulation of store staging
+# ---------------------------------------------------------------------------
+
+
+def staged_all_to_all(x: jax.Array, axis: str) -> jax.Array:
+    """All-to-all routed through a staging point.
+
+    ``x`` is ``[P, chunk, ...]`` per rank (slot d destined to rank d).  The
+    direct version is one ``all_to_all`` moving ``P*chunk`` bytes per rank
+    with per-link share ``chunk``.  The staged version materializes the full
+    ``[P, P, chunk]`` matrix on every rank (PUT = all_gather) and then each
+    rank slices its inbox (GET) — ``P**2 * chunk`` bytes through the gather.
+    """
+    p = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    store = lax.all_gather(x, axis, axis=0, tiled=False)  # [P, P, chunk, ...] on every rank
+    inbox = jnp.moveaxis(store, 0, 1)[me]                  # [P, chunk, ...] from each src
+    return inbox
+
+
+def staged_allreduce(x: jax.Array, axis: str) -> jax.Array:
+    """Allreduce through a store: PUT all shards (all_gather), reduce locally.
+
+    Moves P*|x| bytes per rank instead of ~2|x| for a ring/tree psum.
+    """
+    store = lax.all_gather(x, axis, axis=0, tiled=False)
+    return jnp.sum(store, axis=0)

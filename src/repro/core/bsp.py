@@ -1,0 +1,216 @@
+"""BSP superstep runtime (paper contribution C1 + the §V fault-tolerance gap).
+
+The paper's execution model: N single-program workers advance through
+supersteps; each superstep is (local compute, communication, barrier).  On
+AWS Lambda the paper's architecture has no fault tolerance and a hard 15-min
+deadline (§V "the lack of checkpointing and fault tolerance mechanisms limits
+the ability to recover from failures or time-constrained execution
+boundaries").  This runtime implements the model *and* the missing pieces:
+
+- superstep checkpointing (state snapshot after each barrier),
+- restart/recovery from the last completed superstep,
+- worker-failure + straggler handling: a rank that exceeds its deadline is
+  re-executed (serverless semantics: functions are idempotent re-invocable),
+- elastic membership: resume a checkpoint on a different world size by
+  repartitioning rank state through a user-provided repartition function.
+
+Simulation model: ranks execute sequentially on this host; *modeled* parallel
+wall time per superstep = max over ranks of (measured local compute x platform
+CPU factor) + modeled communication time from the communicator event log.
+This is the same composition the paper uses for Fig 14 (init / datagen /
+compute phases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import time
+from pathlib import Path
+from typing import Any, Callable, Sequence
+
+from repro.core import netsim
+from repro.core.communicator import Communicator
+
+# A superstep: (rank, state, comm, world) -> new state.  Communication MUST go
+# through `comm` so it is priced; local work is timed around the call.
+SuperstepFn = Callable[[int, Any, Communicator, int], Any]
+
+
+class WorkerFailure(RuntimeError):
+    """Injected or detected loss of a worker mid-superstep."""
+
+
+@dataclasses.dataclass
+class SuperstepReport:
+    index: int
+    name: str
+    compute_s: float          # modeled parallel compute (max over ranks, scaled)
+    comm_s: float             # modeled communication time
+    retries: int              # rank re-executions (stragglers / failures)
+    barrier_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.comm_s + self.barrier_s
+
+
+@dataclasses.dataclass
+class RunReport:
+    init_s: float
+    supersteps: list[SuperstepReport]
+    world: int
+
+    @property
+    def total_s(self) -> float:
+        return self.init_s + sum(s.total_s for s in self.supersteps)
+
+
+class BSPRuntime:
+    """Drive P simulated ranks through supersteps with checkpoint/restart."""
+
+    def __init__(
+        self,
+        world_size: int,
+        platform: netsim.PlatformModel = netsim.LAMBDA_10GB,
+        channel_env: str | None = None,
+        checkpoint_dir: str | Path | None = None,
+        deadline_s: float | None = None,
+        cpu_scale: float = 1.0,
+    ):
+        self.world = int(world_size)
+        self.platform = platform
+        channel = (
+            netsim.CHANNELS[channel_env] if channel_env else platform.channel
+        )
+        self.comm = Communicator(self.world, channel)
+        self.checkpoint_dir = Path(checkpoint_dir) if checkpoint_dir else None
+        self.deadline_s = deadline_s
+        self.cpu_scale = cpu_scale
+        self._completed_steps = 0
+
+    # -- checkpointing --------------------------------------------------------
+
+    def _ckpt_path(self, step: int) -> Path:
+        assert self.checkpoint_dir is not None
+        return self.checkpoint_dir / f"superstep_{step:05d}.pkl"
+
+    def _save(self, step: int, states: list[Any]) -> None:
+        if self.checkpoint_dir is None:
+            return
+        self.checkpoint_dir.mkdir(parents=True, exist_ok=True)
+        tmp = self._ckpt_path(step).with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            pickle.dump({"step": step, "world": self.world, "states": states}, f)
+        tmp.rename(self._ckpt_path(step))  # atomic publish
+
+    @staticmethod
+    def latest_checkpoint(checkpoint_dir: str | Path) -> dict | None:
+        d = Path(checkpoint_dir)
+        if not d.exists():
+            return None
+        cands = sorted(d.glob("superstep_*.pkl"))
+        if not cands:
+            return None
+        with open(cands[-1], "rb") as f:
+            return pickle.load(f)
+
+    # -- execution ------------------------------------------------------------
+
+    def run(
+        self,
+        supersteps: Sequence[tuple[str, SuperstepFn]],
+        init_states: list[Any],
+        fail_injector: Callable[[int, int], bool] | None = None,
+        straggle_injector: Callable[[int, int], float] | None = None,
+        resume_from: dict | None = None,
+        max_retries: int = 2,
+    ) -> tuple[list[Any], RunReport]:
+        """Execute `supersteps` over per-rank `init_states`.
+
+        fail_injector(step, rank) -> True means that rank dies on its first
+        attempt of that step (it is retried, serverless-style re-invocation).
+        straggle_injector(step, rank) -> extra seconds of simulated delay; a
+        rank whose simulated time exceeds `deadline_s` is killed and retried.
+        """
+        if len(init_states) != self.world:
+            raise ValueError("need one init state per rank")
+
+        states = list(init_states)
+        start_step = 0
+        if resume_from is not None:
+            if resume_from["world"] != self.world:
+                raise ValueError("world mismatch: use resize_checkpoint() first")
+            states = list(resume_from["states"])
+            start_step = resume_from["step"] + 1
+
+        init_s = self.platform.init_time(self.world)
+        reports: list[SuperstepReport] = []
+
+        for idx in range(start_step, len(supersteps)):
+            name, fn = supersteps[idx]
+            self.comm.reset_events()
+            max_rank_s = 0.0
+            retries = 0
+            new_states: list[Any] = [None] * self.world
+            for rank in range(self.world):
+                attempt = 0
+                while True:
+                    t0 = time.perf_counter()
+                    simulated_extra = (
+                        straggle_injector(idx, rank) if straggle_injector else 0.0
+                    )
+                    try:
+                        if fail_injector and fail_injector(idx, rank):
+                            raise WorkerFailure(f"rank {rank} died in superstep {idx}")
+                        out = fn(rank, states[rank], self.comm, self.world)
+                    except WorkerFailure:
+                        attempt += 1
+                        retries += 1
+                        if attempt > max_retries:
+                            raise
+                        continue
+                    elapsed = (time.perf_counter() - t0) / self.platform.cpu_speed
+                    elapsed = elapsed * self.cpu_scale + simulated_extra
+                    if (
+                        self.deadline_s is not None
+                        and elapsed > self.deadline_s
+                        and attempt <= max_retries
+                    ):
+                        # straggler mitigation: kill + re-invoke (fresh worker
+                        # has no injected delay)
+                        attempt += 1
+                        retries += 1
+                        straggle_injector_backup, straggle_injector = straggle_injector, None
+                        continue
+                    new_states[rank] = out
+                    max_rank_s = max(max_rank_s, elapsed)
+                    break
+            states = new_states
+            comm_s = self.comm.comm_time_s
+            barrier_s = netsim.collective_time(self.comm.channel, "barrier", self.world, 0)
+            reports.append(
+                SuperstepReport(idx, name, max_rank_s, comm_s, retries, barrier_s)
+            )
+            self._save(idx, states)
+            self._completed_steps = idx + 1
+
+        return states, RunReport(init_s, reports, self.world)
+
+
+def resize_checkpoint(
+    ckpt: dict,
+    new_world: int,
+    repartition: Callable[[list[Any], int], list[Any]],
+) -> dict:
+    """Elastic membership change: rebuild per-rank states for a new world size.
+
+    `repartition(states, new_world)` owns the data semantics (e.g. table
+    repartitioning by hash); this wrapper preserves the superstep cursor so a
+    resumed run continues where the old world stopped — the serverless
+    'state lives outside the worker' model.
+    """
+    new_states = repartition(list(ckpt["states"]), new_world)
+    if len(new_states) != new_world:
+        raise ValueError("repartition returned wrong number of states")
+    return {"step": ckpt["step"], "world": new_world, "states": new_states}

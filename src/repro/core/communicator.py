@@ -1,0 +1,256 @@
+"""The serverless communicator — the paper's primary contribution (§III-E).
+
+A :class:`Communicator` provides MPI-style collectives for a world of P ranks.
+The *semantics* (what data lands where) are implemented once, here, on
+per-rank lists of numpy arrays; concrete backends differ only in the
+*topology/time accounting* (direct peer-to-peer vs store-mediated), exactly as
+in the paper where the same Cylon operators run over FMI-direct, Redis, or S3.
+
+Two execution surfaces:
+
+1. **Simulation surface** (this module + ``backends/mediated.py``): per-rank
+   list semantics with an event log that the calibrated network model prices.
+   This is what the BSP runtime and the paper-table benchmarks drive.
+
+2. **SPMD surface** (``backends/direct.py``): the same collective vocabulary
+   as ``jax.lax`` ops over named mesh axes for use inside ``shard_map`` — the
+   TPU-native "direct TCP" path used by the production dataframe operators,
+   the MoE dispatch, and the training loop.
+
+The paper's FMI extensions are reproduced as API surface: variable-length
+collectives (allgatherv / alltoallv), non-blocking ops with handles, retries
+with a ping capability, and atomic-counter rank assignment (``core/nat.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import netsim
+
+
+class CollectiveKind(str, enum.Enum):
+    BARRIER = "barrier"
+    ALLREDUCE = "allreduce"
+    REDUCE_SCATTER = "reduce_scatter"
+    ALLGATHER = "allgather"
+    ALLGATHERV = "allgatherv"
+    ALLTOALL = "alltoall"
+    ALLTOALLV = "alltoallv"
+    BCAST = "bcast"
+    GATHER = "gather"
+    SCATTER = "scatter"
+    P2P = "p2p"
+
+
+@dataclasses.dataclass
+class CommEvent:
+    """One priced communication event (the unit of the §IV time/cost model)."""
+
+    kind: CollectiveKind
+    world: int
+    bytes_per_rank: int     # payload owned by one rank entering the collective
+    time_s: float           # modeled wall time under this backend's channel
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_per_rank * self.world
+
+
+def _nbytes(x: np.ndarray) -> int:
+    return int(np.asarray(x).nbytes)
+
+
+class Communicator:
+    """MPI-style collectives over P simulated ranks with priced events.
+
+    Arguments
+    ---------
+    world_size: number of ranks.
+    channel:    a :class:`netsim.ChannelModel` (direct / redis / s3) that
+                prices each collective. Defaults to Lambda direct TCP.
+    """
+
+    def __init__(self, world_size: int, channel: netsim.ChannelModel | None = None):
+        if world_size < 1:
+            raise ValueError("world_size must be >= 1")
+        self.world_size = int(world_size)
+        self.channel = channel or netsim.LAMBDA_DIRECT
+        self.events: list[CommEvent] = []
+        self._pending: list[tuple[str, Any]] = []  # non-blocking handles
+
+    # -- accounting ---------------------------------------------------------
+
+    def _record(self, kind: CollectiveKind, bytes_per_rank: int) -> CommEvent:
+        t = netsim.collective_time(
+            self.channel, kind.value, self.world_size, bytes_per_rank
+        )
+        ev = CommEvent(kind, self.world_size, int(bytes_per_rank), t)
+        self.events.append(ev)
+        return ev
+
+    @property
+    def comm_time_s(self) -> float:
+        return float(sum(e.time_s for e in self.events))
+
+    @property
+    def bytes_on_wire(self) -> int:
+        mult = 2 if self.channel.staged else 1
+        return mult * int(sum(e.total_bytes for e in self.events))
+
+    def reset_events(self) -> None:
+        self.events.clear()
+
+    # -- collectives (semantics identical across backends) -------------------
+
+    def barrier(self) -> None:
+        self._record(CollectiveKind.BARRIER, 0)
+
+    def allreduce(
+        self, xs: Sequence[np.ndarray], op: Callable = np.add
+    ) -> list[np.ndarray]:
+        self._check_world(xs)
+        acc = np.asarray(xs[0]).copy()
+        for x in xs[1:]:
+            acc = op(acc, np.asarray(x))
+        self._record(CollectiveKind.ALLREDUCE, _nbytes(xs[0]))
+        return [acc.copy() for _ in range(self.world_size)]
+
+    def reduce_scatter(
+        self, xs: Sequence[np.ndarray], op: Callable = np.add
+    ) -> list[np.ndarray]:
+        """Reduce then scatter equal chunks along axis 0."""
+        self._check_world(xs)
+        acc = np.asarray(xs[0]).copy()
+        for x in xs[1:]:
+            acc = op(acc, np.asarray(x))
+        if acc.shape[0] % self.world_size:
+            raise ValueError("reduce_scatter requires axis0 divisible by world")
+        self._record(CollectiveKind.REDUCE_SCATTER, _nbytes(xs[0]))
+        return list(np.split(acc, self.world_size, axis=0))
+
+    def allgather(self, xs: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Fixed-size allgather: every rank gets concat(xs) along axis 0."""
+        self._check_world(xs)
+        shapes = {np.asarray(x).shape for x in xs}
+        if len(shapes) != 1:
+            raise ValueError("allgather requires equal shapes; use allgatherv")
+        out = np.concatenate([np.asarray(x) for x in xs], axis=0)
+        self._record(CollectiveKind.ALLGATHER, _nbytes(xs[0]))
+        return [out.copy() for _ in range(self.world_size)]
+
+    def allgatherv(self, xs: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Variable-length allgather (the paper's FMI extension, §VI).
+
+        Implemented as count-allgather followed by payload exchange — the same
+        two-phase structure our fixed-shape XLA lowering uses.
+        """
+        self._check_world(xs)
+        counts = [int(np.asarray(x).shape[0]) for x in xs]
+        self._record(CollectiveKind.ALLGATHER, np.dtype(np.int64).itemsize)
+        out = np.concatenate([np.asarray(x) for x in xs], axis=0) if sum(counts) else np.asarray(xs[0])[:0]
+        self._record(
+            CollectiveKind.ALLGATHERV, max(_nbytes(x) for x in xs)
+        )
+        return [out.copy() for _ in range(self.world_size)]
+
+    def alltoall(self, sends: Sequence[Sequence[np.ndarray]]) -> list[list[np.ndarray]]:
+        """sends[src][dst] -> recvs[dst][src]; equal-shape chunks."""
+        self._check_world(sends)
+        for row in sends:
+            if len(row) != self.world_size:
+                raise ValueError("alltoall needs a full P x P send matrix")
+        bytes_per_rank = sum(_nbytes(b) for b in sends[0])
+        self._record(CollectiveKind.ALLTOALL, bytes_per_rank)
+        return [
+            [np.asarray(sends[src][dst]).copy() for src in range(self.world_size)]
+            for dst in range(self.world_size)
+        ]
+
+    def alltoallv(
+        self, sends: Sequence[Sequence[np.ndarray]]
+    ) -> tuple[list[list[np.ndarray]], np.ndarray]:
+        """Variable-length all-to-all — the shuffle primitive (paper §III-A:
+        "Cylon channels API implements the AllToAll operation").
+
+        Returns (recvs[dst][src], counts matrix[src, dst]).
+        """
+        self._check_world(sends)
+        counts = np.array(
+            [[int(np.asarray(b).shape[0]) for b in row] for row in sends], dtype=np.int64
+        )
+        # phase 1: exchange counts (an alltoall of one int per pair)
+        self._record(CollectiveKind.ALLTOALL, self.world_size * 8)
+        # phase 2: payload
+        max_payload = max(sum(_nbytes(b) for b in row) for row in sends)
+        self._record(CollectiveKind.ALLTOALLV, max_payload)
+        recvs = [
+            [np.asarray(sends[src][dst]).copy() for src in range(self.world_size)]
+            for dst in range(self.world_size)
+        ]
+        return recvs, counts
+
+    def bcast(self, x: np.ndarray, root: int = 0) -> list[np.ndarray]:
+        self._check_rank(root)
+        self._record(CollectiveKind.BCAST, _nbytes(x))
+        return [np.asarray(x).copy() for _ in range(self.world_size)]
+
+    def gather(self, xs: Sequence[np.ndarray], root: int = 0) -> list[np.ndarray] | None:
+        self._check_world(xs)
+        self._check_rank(root)
+        self._record(CollectiveKind.GATHER, max(_nbytes(x) for x in xs))
+        return [np.asarray(x).copy() for x in xs]
+
+    def scatter(self, chunks: Sequence[np.ndarray], root: int = 0) -> list[np.ndarray]:
+        self._check_world(chunks)
+        self._check_rank(root)
+        self._record(CollectiveKind.SCATTER, max(_nbytes(x) for x in chunks))
+        return [np.asarray(x).copy() for x in chunks]
+
+    def send(self, x: np.ndarray, dst: int) -> None:
+        self._check_rank(dst)
+        self._record(CollectiveKind.P2P, _nbytes(x))
+
+    # -- non-blocking surface (paper §VI: "our design called for non-blocking
+    #    I/O"); simulation completes eagerly but preserves the handle protocol.
+
+    def iallreduce(self, xs: Sequence[np.ndarray], op: Callable = np.add) -> int:
+        res = self.allreduce(xs, op)
+        self._pending.append(("allreduce", res))
+        return len(self._pending) - 1
+
+    def wait(self, handle: int) -> Any:
+        kind, res = self._pending[handle]
+        return res
+
+    def ping(self, peer: int) -> bool:
+        """Keepalive to prevent eager socket termination (paper §VI)."""
+        self._check_rank(peer)
+        self._record(CollectiveKind.P2P, 1)
+        return True
+
+    # -- helpers -------------------------------------------------------------
+
+    def _check_world(self, xs: Sequence[Any]) -> None:
+        if len(xs) != self.world_size:
+            raise ValueError(
+                f"expected one entry per rank ({self.world_size}), got {len(xs)}"
+            )
+
+    def _check_rank(self, r: int) -> None:
+        if not (0 <= r < self.world_size):
+            raise ValueError(f"rank {r} out of range for world {self.world_size}")
+
+
+def make_communicator(world_size: int, env: str = "direct") -> Communicator:
+    """Factory mirroring the paper's ``env`` switch (Listing 1: 'fmi' /
+    'fmi-cylon' / storage channels)."""
+    try:
+        channel = netsim.CHANNELS[env]
+    except KeyError:
+        raise ValueError(f"unknown communicator env {env!r}; options: {sorted(netsim.CHANNELS)}")
+    return Communicator(world_size, channel)

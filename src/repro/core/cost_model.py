@@ -1,0 +1,173 @@
+"""Empirical serverless cost model (paper contribution C3, §IV-F, Figs 15-16).
+
+Reproduces every cost figure in the paper analytically:
+
+- NAT-traversal connection phase at 32 workers x 10 GB x ~31.5 s  => ~$0.17
+- distributed computation phase                                   => $0.004-0.016
+- Join/Redis at 32 nodes  => ~$0.032 per execution
+- Join/S3 at 32 nodes     => ~$0.150 per execution (4.7x Redis)
+- Step Functions orchestration negligible vs Lambda compute
+- EC2 idle-time dominance for intermittent workloads
+- 120-execution revision campaign                                  => ~$3.25
+
+Pricing constants are public AWS list prices (us-east-1, 2024/25).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# --- AWS list prices -------------------------------------------------------
+LAMBDA_USD_PER_GB_S = 0.0000166667
+LAMBDA_USD_PER_REQUEST = 0.20 / 1e6
+STEP_FN_USD_PER_TRANSITION = 0.025 / 1000
+S3_USD_PER_PUT = 0.005 / 1000
+S3_USD_PER_GET = 0.0004 / 1000
+ELASTICACHE_USD_PER_NODE_HR = 0.068      # cache.m5.large on-demand
+EC2_M3_XLARGE_USD_PER_HR = 0.266
+EC2_M3_LARGE_USD_PER_HR = 0.133
+
+
+@dataclasses.dataclass(frozen=True)
+class LambdaInvocation:
+    """One Lambda function execution."""
+
+    mem_gb: float
+    duration_s: float
+
+    @property
+    def gb_seconds(self) -> float:
+        return self.mem_gb * self.duration_s
+
+    @property
+    def cost(self) -> float:
+        return self.gb_seconds * LAMBDA_USD_PER_GB_S + LAMBDA_USD_PER_REQUEST
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerlessJobCost:
+    """Cost breakdown of one BSP job on Lambda (Fig 15/16 decomposition)."""
+
+    workers: int
+    mem_gb: float
+    init_s: float             # NAT traversal / bootstrap phase
+    compute_s: float          # data generation + computation phase
+    step_fn_transitions: int  # Step Function states executed
+    s3_puts: int = 0
+    s3_gets: int = 0
+
+    @property
+    def init_cost(self) -> float:
+        return self.workers * self.mem_gb * self.init_s * LAMBDA_USD_PER_GB_S
+
+    @property
+    def compute_cost(self) -> float:
+        return self.workers * self.mem_gb * self.compute_s * LAMBDA_USD_PER_GB_S
+
+    @property
+    def lambda_request_cost(self) -> float:
+        return self.workers * LAMBDA_USD_PER_REQUEST
+
+    @property
+    def orchestration_cost(self) -> float:
+        return self.step_fn_transitions * STEP_FN_USD_PER_TRANSITION
+
+    @property
+    def storage_cost(self) -> float:
+        return self.s3_puts * S3_USD_PER_PUT + self.s3_gets * S3_USD_PER_GET
+
+    @property
+    def total(self) -> float:
+        return (
+            self.init_cost
+            + self.compute_cost
+            + self.lambda_request_cost
+            + self.orchestration_cost
+            + self.storage_cost
+        )
+
+
+def step_function_transitions(workers: int) -> int:
+    """States in the paper's Fig 7 machine: init -> validate -> Map fan-out
+    (one ExtractAndInvokeLambda + Invoke per worker) -> collect."""
+    return 4 + 2 * workers
+
+
+def join_cost(
+    workers: int,
+    *,
+    channel: str = "direct",
+    mem_gb: float = 10.0,
+    init_s: float | None = None,
+    compute_s: float | None = None,
+    shuffle_rounds: int = 10,
+) -> ServerlessJobCost:
+    """Cost of one distributed-join experiment (paper Fig 16 inputs).
+
+    Defaults reproduce the paper's measured 32-node numbers; callers override
+    the phase durations with measured/simulated values for other points.
+    """
+    from repro.core import netsim
+
+    platform = netsim.LAMBDA_10GB if mem_gb >= 8 else netsim.LAMBDA_6GB
+    if init_s is None:
+        # NAT setup applies only to the direct channel; storage channels have
+        # negligible connection setup (paper §IV-E).
+        init_s = platform.init_time(workers) if channel == "direct" else 1.0
+    if compute_s is None:
+        ch = netsim.CHANNELS[channel]
+        # strong-scaling join basis (paper Fig 15/16 cost basis): 4.5M rows,
+        # `shuffle_rounds` iterations of (hash partition + alltoallv + local
+        # join); local phase ~0.1 s/iteration at 32 workers (Table III).
+        local_s = 0.1 * (32.0 / max(workers, 1)) * shuffle_rounds
+        per_rank_bytes = int(4.5e6 / max(workers, 1) * 2 * 16)
+        comm = sum(
+            netsim.collective_time(ch, "alltoallv", workers, per_rank_bytes)
+            + netsim.collective_time(ch, "barrier", workers, 0)
+            for _ in range(shuffle_rounds)
+        )
+        compute_s = local_s + comm
+
+    s3_puts = s3_gets = 0
+    if channel == "s3":
+        s3_puts = s3_gets = workers * shuffle_rounds
+
+    return ServerlessJobCost(
+        workers=workers,
+        mem_gb=mem_gb,
+        init_s=init_s,
+        compute_s=compute_s,
+        step_fn_transitions=step_function_transitions(workers),
+        s3_puts=s3_puts,
+        s3_gets=s3_gets,
+    )
+
+
+def ec2_cost(workers: int, wall_s: float, *, xlarge: bool = True, idle_fraction: float = 0.0) -> float:
+    """Provisioned-VM cost for the same job; `idle_fraction` models the
+    intermittent-workload idle time the paper argues dominates (§I C-iii)."""
+    rate = EC2_M3_XLARGE_USD_PER_HR if xlarge else EC2_M3_LARGE_USD_PER_HR
+    busy_hr = wall_s / 3600.0
+    total_hr = busy_hr / max(1e-9, (1.0 - idle_fraction))
+    return workers * rate * total_hr
+
+
+def break_even_utilization(workers: int, mem_gb: float, job_s: float) -> float:
+    """Fraction of the hour a provisioned cluster must be busy for EC2 to be
+    cheaper than Lambda for repeated runs of this job."""
+    lam = ServerlessJobCost(
+        workers, mem_gb, init_s=0.0, compute_s=job_s,
+        step_fn_transitions=step_function_transitions(workers),
+    ).total
+    jobs_per_hr_budget = workers * EC2_M3_XLARGE_USD_PER_HR / max(lam, 1e-12)
+    busy_s_per_hr = jobs_per_hr_budget * job_s
+    return min(1.0, busy_s_per_hr / 3600.0)
+
+
+def revision_campaign_cost(
+    executions: int = 120, mem_gb: float = 10.0, mean_duration_s: float = 160.0
+) -> float:
+    """Paper: 'The total cost for all revision experiments (120 Lambda
+    executions across 5 experiment types) was only $3.25.'"""
+    per = LambdaInvocation(mem_gb, mean_duration_s).cost
+    return executions * per

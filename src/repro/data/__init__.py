@@ -1,0 +1,1 @@
+"""Data pipeline: shuffle-based preprocessing feeding training."""

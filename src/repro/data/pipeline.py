@@ -1,0 +1,117 @@
+"""Preprocessing pipeline: the paper's workload feeding the training loop.
+
+Pipeline stages (all shuffle-based, all through the same communicator /
+collectives the trainer uses — DESIGN.md §4):
+
+1. load      : raw document shards into the DDMF (doc_id, tokens...)
+2. join      : documents x metadata (quality scores) on doc_id
+3. filter    : drop low-quality docs (relational select)
+4. dedupe    : groupby content-hash, keep one representative (count==1 keep
+               or min doc_id) — the shuffle-heavy stage
+5. pack      : token column -> fixed [batch, seq] training batches
+
+Runs in two modes: simulation (per-rank tables + Communicator, used by the
+BSP examples) and single-table local mode (smoke/CI).  The SPMD variant is
+exercised through ops_dist.*_spmd in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.communicator import Communicator
+from repro.dataframe import Table, ops_dist, ops_local, tensor
+from repro.dataframe.partition import hash32
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    docs_in: int
+    docs_joined: int
+    docs_kept: int
+    docs_after_dedupe: int
+    batches: int
+
+
+def synthesize_corpus(ndocs: int, doc_len: int, vocab: int, seed: int = 0,
+                      dup_frac: float = 0.2):
+    """Synthetic corpus with duplicate documents + metadata table."""
+    rng = np.random.default_rng(seed)
+    n_unique = max(1, int(ndocs * (1 - dup_frac)))
+    base = rng.integers(1, vocab, (n_unique, doc_len)).astype(np.int32)
+    idx = np.concatenate([np.arange(n_unique),
+                          rng.integers(0, n_unique, ndocs - n_unique)])
+    rng.shuffle(idx)
+    docs = base[idx]
+    doc_ids = np.arange(ndocs, dtype=np.int32)
+    meta = {
+        "doc_id": doc_ids.copy(),
+        "quality": rng.uniform(0, 1, ndocs).astype(np.float32),
+    }
+    return doc_ids, docs, meta
+
+
+def _content_hash(docs: np.ndarray) -> np.ndarray:
+    h = np.zeros(docs.shape[0], np.uint32)
+    for j in range(docs.shape[1]):
+        h = np.asarray(hash32(jnp.asarray(h.astype(np.int32))), np.uint32) ^ docs[:, j].astype(np.uint32)
+    return h.astype(np.int32) & 0x7FFFFFFF
+
+
+def preprocess_local(
+    doc_ids, docs, meta, *, quality_min: float = 0.25,
+    batch: int = 4, seq_len: int = 64,
+):
+    """Single-table pipeline (smoke mode); returns (token batches, stats)."""
+    ndocs, doc_len = docs.shape
+    content = _content_hash(docs)
+    dtab = Table.from_dict(
+        {"doc_id": doc_ids, "content": content}, capacity=ndocs + 8
+    )
+    mtab = Table.from_dict(
+        {"doc_id": meta["doc_id"],
+         "quality_pm": (meta["quality"] * 1000).astype(np.int32)},
+        capacity=ndocs + 8,
+    )
+    joined = ops_local.join_unique(dtab, mtab, "doc_id")
+    kept = joined.filter(joined.columns["quality_pm"] >= int(quality_min * 1000))
+    # dedupe: groupby content hash, keep min doc_id
+    rep = ops_local.groupby_agg(kept, "content", {"doc_id": "min"})
+    keep_ids = np.sort(np.asarray(rep.to_numpy()["doc_id_min"]))
+    sel = np.isin(np.asarray(doc_ids), keep_ids)
+    tokens = docs[sel].reshape(-1)
+    ttab = Table.from_dict({"tok": tokens})
+    toks, mask = tensor.to_token_batches(ttab, "tok", batch, seq_len)
+    nbatches = tokens.size // (batch * seq_len)
+    stats = PipelineStats(ndocs, int(joined.count), int(kept.count),
+                          int(rep.count), max(nbatches, 1))
+    return (toks, mask), stats
+
+
+def preprocess_distributed(
+    doc_ids, docs, meta, comm: Communicator, *, quality_min: float = 0.25,
+):
+    """Per-rank pipeline through the communicator (the BSP surface)."""
+    world = comm.world_size
+    ndocs = docs.shape[0]
+    per = ndocs // world
+    content = _content_hash(docs)
+    dshards, mshards = [], []
+    for r in range(world):
+        sl = slice(r * per, (r + 1) * per)
+        dshards.append(Table.from_dict(
+            {"doc_id": doc_ids[sl], "content": content[sl]}, capacity=per * 2))
+        mshards.append(Table.from_dict(
+            {"doc_id": meta["doc_id"][sl],
+             "quality_pm": (meta["quality"][sl] * 1000).astype(np.int32)},
+            capacity=per * 2))
+    joined = ops_dist.sim_join(dshards, mshards, "doc_id", comm)
+    kept = [t.filter(t.columns["quality_pm"] >= int(quality_min * 1000)) for t in joined]
+    deduped = ops_dist.sim_groupby(kept, "content", {"doc_id": "min"}, comm)
+    keep_ids = np.sort(np.concatenate(
+        [np.asarray(t.to_numpy()["doc_id_min"]) for t in deduped]
+    ))
+    return keep_ids, comm.comm_time_s

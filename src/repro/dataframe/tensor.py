@@ -1,0 +1,38 @@
+"""Table -> tensor handoff (paper §III-A: "conversion from tabular or table
+format to tensor format required for Machine Learning/Deep Learning").
+
+The data-engineering output (a packed token table) becomes fixed-shape
+training batches here.  Zero-copy in spirit: columns are already device
+arrays; this is reshaping + masking only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dataframe.table import Table
+
+
+def to_matrix(table: Table, columns: list[str], dtype=jnp.float32) -> jax.Array:
+    """Stack 1-D columns into a [capacity, n_cols] feature matrix (masked)."""
+    mask = table.valid_mask()
+    cols = [jnp.where(mask, table.columns[c], 0).astype(dtype) for c in columns]
+    return jnp.stack(cols, axis=1)
+
+
+def to_token_batches(
+    table: Table, token_col: str, batch: int, seq_len: int, pad_id: int = 0
+) -> tuple[jax.Array, jax.Array]:
+    """Pack a token column into [batch, seq_len] (+loss mask), truncating or
+    padding as needed.  Rows must already be in document order."""
+    need = batch * seq_len
+    toks = table.columns[token_col]
+    mask = table.valid_mask()
+    toks = jnp.where(mask, toks, pad_id)
+    if toks.shape[0] < need:
+        toks = jnp.pad(toks, (0, need - toks.shape[0]), constant_values=pad_id)
+        mask = jnp.pad(mask, (0, need - mask.shape[0]), constant_values=False)
+    toks = toks[:need].reshape(batch, seq_len).astype(jnp.int32)
+    lmask = mask[:need].reshape(batch, seq_len)
+    return toks, lmask

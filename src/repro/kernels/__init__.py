@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has:
+- ``kernel.py`` : pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+- ``ops.py``    : jit'd public wrapper (dispatches kernel vs reference)
+- ``ref.py``    : pure-jnp oracle, swept against the kernel in interpret mode
+
+Hot spots (DESIGN.md §3): flash_attention (prefill/train attention),
+hash_partition (shuffle phase 1), segment_reduce (groupby / MoE combine,
+scatter re-expressed as an MXU one-hot matmul), join_probe (sorted-probe
+phase of the distributed join).
+"""

@@ -1,0 +1,145 @@
+"""Flash attention Pallas TPU kernel.
+
+Block structure mirrors ``models.layers._attention_flash`` (the XLA twin):
+grid = (batch x q_head, q_blocks, kv_blocks), kv innermost so the TPU's
+sequential grid walk accumulates the online softmax in VMEM scratch; the
+output block for (bh, qi) is revisited across the kv dimension and written
+once on the last kv step.
+
+VMEM working set per step: q (bq x hd) + k,v (bk x hd) + logits (bq x bk)
+f32 + scratch (bq x hd + 2 x bq) — with bq=bk=512, hd<=256 that is ~1.6 MB,
+comfortably inside a v5e core's VMEM, and all matmul dims are 128-aligned
+for the MXU.
+
+GQA: q heads are grouped; the k/v index map folds the group factor so each
+kv head's block is shared by its `group` q heads without duplication in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    # scalar-ish inputs (small blocks)
+    kvlen_ref,
+    # array blocks
+    q_ref, k_ref, v_ref,
+    # outputs
+    o_ref,
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *,
+    causal: bool,
+    window: int,
+    softcap: float,
+    q_block: int,
+    kv_block: int,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                    # [bq, bk]
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+    k_pos = kj * kv_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+    mask = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    mask &= k_pos < kvlen_ref[0, 0]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "q_block", "kv_block", "interpret", "groups",
+    ),
+)
+def flash_attention(
+    q: jax.Array,          # [BH, Tq, hd]   (BH = B * KV * G, head-major)
+    k: jax.Array,          # [BKV, Tk, hd]  (BKV = B * KV)
+    v: jax.Array,
+    kv_len: jax.Array,     # [] int32 valid prefix of k/v (Tk if fully valid)
+    *,
+    groups: int = 1,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, tq, hd = q.shape
+    bkv, tk, _ = k.shape
+    assert bh == bkv * groups, (bh, bkv, groups)
+    q_block = min(q_block, tq)
+    kv_block = min(kv_block, tk)
+    assert tq % q_block == 0 and tk % kv_block == 0
+    grid = (bh, tq // q_block, tk // kv_block)
+    scale = 1.0 / np.sqrt(hd)
+    kvl = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal, window=window, softcap=softcap,
+        q_block=q_block, kv_block=kv_block, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, i, j, g=groups: (b // g, j, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, i, j, g=groups: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kvl, q, k, v)

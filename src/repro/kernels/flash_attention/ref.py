@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash attention kernel (naive full softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,          # [BH, Tq, hd]
+    k: jax.Array,          # [BKV, Tk, hd]
+    v: jax.Array,
+    kv_len: jax.Array,
+    *,
+    groups: int = 1,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    bh, tq, hd = q.shape
+    bkv, tk, _ = k.shape
+    kf = jnp.repeat(k, groups, axis=0).astype(jnp.float32)
+    vf = jnp.repeat(v, groups, axis=0).astype(jnp.float32)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32) / np.sqrt(hd), kf)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(tq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    mask &= k_pos < jnp.asarray(kv_len, jnp.int32)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkh->bqh", p, vf)
+    return out.astype(q.dtype)

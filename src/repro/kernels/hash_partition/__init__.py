@@ -1,0 +1,1 @@
+from repro.kernels.hash_partition import ops, ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""Row-hash + bucket-id Pallas kernel (shuffle phase 1).
+
+Elementwise murmur-style finalizer over integer keys; one VMEM block of keys
+per grid step, fused hash -> bucket modulo so the partition phase reads keys
+from HBM exactly once.  Block = 8 x 1024 int32 (32 KiB) keeps the VPU lanes
+full; the op is memory-bound so the kernel's job is simply to not waste the
+single pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_SEED_MIX = 0x9E3779B9
+
+
+def _hash_kernel(x_ref, h_ref, b_ref, *, seed: int, num_partitions: int):
+    seed_mixed = (seed * _SEED_MIX + 1) & 0xFFFFFFFF
+    h = x_ref[...].astype(jnp.uint32) ^ jnp.uint32(seed_mixed)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_M1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_M2)
+    h = h ^ (h >> 16)
+    h_ref[...] = h
+    b_ref[...] = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_partitions", "seed", "block", "interpret"))
+def hash_partition(
+    keys: jax.Array,       # [n] int32/uint32
+    *,
+    num_partitions: int,
+    seed: int = 0,
+    block: int = 8192,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    n = keys.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    x = jnp.pad(keys, (0, pad)).reshape(-1, block)
+    rows = x.shape[0]
+    kernel = functools.partial(_hash_kernel, seed=seed, num_partitions=num_partitions)
+    h, b = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, block), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, block), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    return h.reshape(-1)[:n], b.reshape(-1)[:n]

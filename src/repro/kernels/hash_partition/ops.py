@@ -1,0 +1,16 @@
+"""Public hash-partition op: Pallas kernel on TPU, jnp oracle elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.hash_partition import kernel, ref
+
+
+def hash_partition(keys, *, num_partitions: int, seed: int = 0, force_kernel: bool = False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return kernel.hash_partition(
+            keys, num_partitions=num_partitions, seed=seed,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return ref.hash_partition_ref(keys, num_partitions=num_partitions, seed=seed)

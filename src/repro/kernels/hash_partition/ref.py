@@ -1,0 +1,15 @@
+"""jnp oracle for the hash/bucket kernel (shared with dataframe.partition)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dataframe.partition import hash32
+
+
+def hash_partition_ref(
+    keys: jax.Array, *, num_partitions: int, seed: int = 0
+) -> tuple[jax.Array, jax.Array]:
+    h = hash32(keys, seed)
+    return h, (h % jnp.uint32(num_partitions)).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.join_probe import ops, ref  # noqa: F401

@@ -1,0 +1,77 @@
+"""Sorted-probe join Pallas kernel.
+
+Branchless binary search of each left key against a sorted right-key page
+held in VMEM.  Grid walks left-key blocks; the right page (<= `page` keys,
+128-aligned) is resident across the whole grid (constant index map), so HBM
+reads the probe side exactly once.  log2(page) fori iterations of pure
+VPU selects — no data-dependent control flow.
+
+ops.py handles multi-page probe sides by first-level searchsorted over page
+boundaries and one kernel call per page bucket (falls back to the oracle on
+CPU or when the probe side exceeds VMEM budget).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(rk_ref, lk_ref, idx_ref, hit_ref, *, page: int, steps: int):
+    rkeys = rk_ref[0]                      # [page] int32 sorted (padded with INT32_MAX)
+    lkeys = lk_ref[0]                      # [bn]
+
+    lo = jnp.zeros_like(lkeys)
+    hi = jnp.full_like(lkeys, page)
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        mv = rkeys[jnp.clip(mid, 0, page - 1)]
+        go_right = mv < lkeys
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    pos = jnp.clip(lo, 0, page - 1)
+    found = rkeys[pos] == lkeys
+    idx_ref[0] = pos.astype(jnp.int32)
+    hit_ref[0] = found
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def probe_sorted(
+    right_keys: jax.Array,   # [page] int32 sorted, padded with INT32_MAX
+    left_keys: jax.Array,    # [n] int32
+    *,
+    block: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    page = right_keys.shape[0]
+    steps = max(1, int(page).bit_length())  # lower-bound search: lo==hi needs ceil(log2(page))+1
+    n = left_keys.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    lk = jnp.pad(left_keys, (0, pad)).reshape(-1, block)
+    rows = lk.shape[0]
+    kernel = functools.partial(_probe_kernel, page=page, steps=steps)
+    idx, hit = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, page), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, block), jnp.int32),
+            jax.ShapeDtypeStruct((rows, block), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(right_keys.reshape(1, page), lk)
+    return idx.reshape(-1)[:n], hit.reshape(-1)[:n]

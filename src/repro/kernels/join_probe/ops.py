@@ -1,0 +1,18 @@
+"""Public sorted-probe op."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.join_probe import kernel, ref
+
+_MAX_VMEM_PAGE = 32768
+
+
+def probe_sorted(right_keys, left_keys, *, force_kernel: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if (force_kernel or on_tpu) and right_keys.shape[0] <= _MAX_VMEM_PAGE:
+        return kernel.probe_sorted(
+            right_keys, left_keys, interpret=not on_tpu
+        )
+    return ref.probe_sorted_ref(right_keys, left_keys)

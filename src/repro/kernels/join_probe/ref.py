@@ -1,0 +1,13 @@
+"""jnp oracle: searchsorted probe."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_sorted_ref(right_keys: jax.Array, left_keys: jax.Array):
+    pos = jnp.searchsorted(right_keys, left_keys)
+    pos_c = jnp.clip(pos, 0, right_keys.shape[0] - 1)
+    hit = right_keys[pos_c] == left_keys
+    return pos_c.astype(jnp.int32), hit

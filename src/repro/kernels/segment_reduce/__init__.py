@@ -1,0 +1,1 @@
+from repro.kernels.segment_reduce import ops, ref  # noqa: F401

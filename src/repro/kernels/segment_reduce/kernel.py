@@ -1,0 +1,79 @@
+"""Blocked segment-sum Pallas kernel (groupby aggregate / MoE combine).
+
+TPU adaptation (DESIGN.md): scatter-add is serial poison on the VPU, so the
+per-block reduction is re-expressed as a ONE-HOT MATMUL on the MXU:
+
+    partial[b, :] = onehot(local_seg[b])^T @ values[b]     (msb x bn @ bn)
+
+Segments are assumed sorted (the groupby sorts first), so each block of `bn`
+rows touches at most `msb` distinct segments starting at seg[block_start];
+`ops.py` combines the [n_blocks, msb] partials with a cheap jnp segment-sum
+over block offsets.  All matmul dims 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(seg_ref, val_ref, base_ref, out_ref, *, block: int, max_seg: int):
+    seg = seg_ref[0]                           # [bn] int32 (sorted)
+    vals = val_ref[0].astype(jnp.float32)      # [bn]
+    base = seg[0]
+    base_ref[0, 0] = base
+    local = seg - base                         # in [0, msb) if within bound
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, max_seg), 1)
+    onehot = (cols == local[:, None]).astype(jnp.float32)
+    # [msb] = [bn] @ [bn, msb]
+    out_ref[0] = jax.lax.dot_general(
+        vals, onehot, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_seg", "interpret"))
+def segment_sum_blocked(
+    seg_ids: jax.Array,    # [n] int32, sorted ascending
+    values: jax.Array,     # [n] float
+    *,
+    block: int = 1024,
+    max_seg: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (partials [n_blocks, max_seg] f32, bases [n_blocks] int32).
+
+    Rows whose segment exceeds base+max_seg within a block are NOT captured
+    (one-hot row is all-zero); callers must choose max_seg >= max distinct
+    segments per block (ops.py validates against the oracle in tests).
+    """
+    n = seg_ids.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    # pad with a sentinel segment that continues the last row's segment
+    seg_p = jnp.pad(seg_ids, (0, pad), mode="edge")
+    val_p = jnp.pad(values.astype(jnp.float32), (0, pad))
+    rows = seg_p.shape[0] // block
+    seg_b = seg_p.reshape(rows, block)
+    val_b = val_p.reshape(rows, block)
+    kernel = functools.partial(_segsum_kernel, block=block, max_seg=max_seg)
+    bases, partials = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, max_seg), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rows, max_seg), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seg_b, val_b)
+    return partials, bases[:, 0]

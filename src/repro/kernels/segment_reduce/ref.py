@@ -1,0 +1,12 @@
+"""jnp oracle: plain segment_sum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(seg_ids: jax.Array, values: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(
+        values.astype(jnp.float32), seg_ids, num_segments=num_segments
+    )

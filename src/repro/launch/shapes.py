@@ -1,0 +1,91 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct input specs.
+
+Four cells per architecture (40 total):
+
+- train_4k     : seq 4,096   global_batch 256   -> train_step
+- prefill_32k  : seq 32,768  global_batch 32    -> prefill (serve)
+- decode_32k   : seq 32,768  global_batch 128   -> serve_step (1 new token,
+                 KV cache of seq_len)
+- long_500k    : seq 524,288 global_batch 1     -> serve_step; requires
+                 sub-quadratic attention (skips per DESIGN.md
+                 §Arch-applicability)
+
+``input_specs`` is allocation-free (ShapeDtypeStruct only), weak-type
+correct, and shardable — the dry-run lowers directly from it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ArchConfig
+
+ShapeDtypeStruct = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    # memory knobs (per-cell; §Perf iterates these)
+    microbatches: int = 1
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256, microbatches=4),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# per-arch microbatch overrides for train_4k (memory fit; see EXPERIMENTS.md)
+TRAIN_MICROBATCH = {
+    "qwen3-moe-235b-a22b": 8,
+    "kimi-k2-1t-a32b": 8,
+}
+
+
+def cell_supported(cfg: ArchConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """40-cell applicability matrix (skips documented in DESIGN.md)."""
+    if cell.name == "long_500k" and cfg.family == "audio":
+        return False, "long_500k skipped: enc-dec operating regime is <=1500 source frames"
+    if cell.name == "long_500k" and not cfg.has_subquadratic_attention:
+        return False, "long_500k skipped: pure full-attention family"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Model inputs as ShapeDtypeStructs for one cell."""
+    b = cell.global_batch
+    s = cell.seq_len if cell.kind != "decode" else 1
+    specs = {
+        "tokens": ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cell.kind == "train":
+        specs["mask"] = ShapeDtypeStruct((b, s), jnp.float32)
+    if cfg.family == "audio":
+        specs["frames"] = ShapeDtypeStruct(
+            (b, cfg.source_positions, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm" and cell.kind != "decode":
+        specs["patches"] = ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def decode_state_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Abstract decode state (KV cache / recurrent state) for decode cells."""
+    return jax.eval_shape(
+        lambda: api.init_decode_state(cfg, cell.global_batch, cell.seq_len)
+    )
+
+
+def params_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))

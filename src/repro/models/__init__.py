@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures behind one family-dispatched API."""
+
+from repro.models.config import ArchConfig  # noqa: F401
+from repro.models import api  # noqa: F401

@@ -1,0 +1,108 @@
+"""Unified model API over the five structural families.
+
+Every architecture exposes the same surface, keyed off ``ArchConfig.family``:
+
+- ``init_params(cfg, key)``
+- ``loss_fn(cfg, params, batch, ctx)``   -> (scalar loss, metrics dict)
+- ``init_decode_state(cfg, batch, max_len)``  (KV cache or recurrent state)
+- ``prefill_fn(cfg, params, batch, state, ctx)``
+- ``decode_fn(cfg, params, tokens, state, ctx)``
+
+``batch`` dicts come from ``launch.shapes.input_specs`` — tokens/labels/mask
+plus the modality-stub extras (``frames`` for audio, ``patches`` for vlm).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, griffin, rwkv, transformer
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        params = transformer.init_params(cfg, key)
+    elif cfg.family == "ssm":
+        params = rwkv.init_params(cfg, key)
+    elif cfg.family == "hybrid":
+        params = griffin.init_params(cfg, key)
+    elif cfg.family == "audio":
+        params = encdec.init_params(cfg, key)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    pd = jnp.dtype(cfg.param_dtype)
+    if pd != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(pd), params)
+    return params
+
+
+def logits_fn(cfg: ArchConfig, params: dict, batch: dict, ctx=None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence logits + aux loss (MoE balance), family-dispatched."""
+    tokens = batch["tokens"]
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        prefix = batch.get("patches")
+        return transformer.forward(cfg, params, tokens, prefix_embeds=prefix, ctx=ctx)
+    if cfg.family == "ssm":
+        logits, aux, _ = rwkv.forward(cfg, params, tokens, ctx=ctx)
+        return logits, aux
+    if cfg.family == "hybrid":
+        logits, aux, _ = griffin.forward(cfg, params, tokens, ctx=ctx)
+        return logits, aux
+    if cfg.family == "audio":
+        return encdec.forward(cfg, params, tokens, batch["frames"], ctx=ctx)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, ctx=None) -> tuple[jax.Array, dict]:
+    logits, aux = logits_fn(cfg, params, batch, ctx=ctx)
+    loss = L.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:], batch["mask"][:, 1:])
+    total = loss + aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return rwkv.init_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return griffin.init_state(cfg, batch, max_len, dtype)
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, max_len, dtype)
+    raise ValueError(cfg.family)
+
+
+def prefill_fn(cfg: ArchConfig, params: dict, batch: dict, state: Any, ctx=None):
+    tokens = batch["tokens"]
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.prefill(
+            cfg, params, tokens, state, prefix_embeds=batch.get("patches"), ctx=ctx
+        )
+    if cfg.family == "ssm":
+        logits, _, st = rwkv.forward(cfg, params, tokens, state=state, ctx=ctx)
+        return logits[:, -1:], st
+    if cfg.family == "hybrid":
+        logits, _, st = griffin.forward(cfg, params, tokens, state=state, ctx=ctx)
+        return logits[:, -1:], st
+    if cfg.family == "audio":
+        return encdec.prefill(cfg, params, tokens, batch["frames"], state, ctx=ctx)
+    raise ValueError(cfg.family)
+
+
+def decode_fn(cfg: ArchConfig, params: dict, tokens: jax.Array, state: Any, ctx=None):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.decode_step(cfg, params, tokens, state, ctx=ctx)
+    if cfg.family == "ssm":
+        return rwkv.decode_step(cfg, params, tokens, state, ctx=ctx)
+    if cfg.family == "hybrid":
+        return griffin.decode_step(cfg, params, tokens, state, ctx=ctx)
+    if cfg.family == "audio":
+        return encdec.decode_step(cfg, params, tokens, state, ctx=ctx)
+    raise ValueError(cfg.family)

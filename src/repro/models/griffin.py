@@ -1,0 +1,293 @@
+"""RecurrentGemma / Griffin — hybrid RG-LRU + local-attention (MQA) family.
+
+Block pattern ("rec", "rec", "attn") repeats; the scan groups whole pattern
+repetitions (structurally different sublayers can't share one scanned body
+without carrying both param sets — DESIGN.md notes the 12x3+2 layout for the
+38-layer config).  The RG-LRU linear recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),   a_t = exp(log_a_t)
+
+runs as an associative scan over time for train/prefill and carries (h, conv
+window, local KV) state for decode — bounded state, which is why this family
+runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+_C = 8.0  # RG-LRU decay sharpness (Griffin paper)
+
+
+# ---------------------------------------------------------------------------
+# sublayer params
+# ---------------------------------------------------------------------------
+
+
+def _init_rec(cfg: ArchConfig, key) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "w_in": L.init_linear(ks[0], (d, w)),
+        "w_gate": L.init_linear(ks[1], (d, w)),
+        "w_out": L.init_linear(ks[2], (w, d)),
+        "conv_w": L.init_linear(ks[3], (cfg.conv_width, w), scale=0.1),
+        "wa": L.init_linear(ks[4], (w, w)),
+        "wi_g": L.init_linear(ks[5], (w, w)),
+        "a_param": jnp.full((w,), 0.6, jnp.float32),
+        "wi": L.init_linear(ks[6], (d, 2 * cfg.d_ff)),
+        "wo": L.init_linear(ks[7], (cfg.d_ff, d)),
+    }
+
+
+def _init_attn(cfg: ArchConfig, key) -> dict:
+    d, hd, h, kv = cfg.d_model, cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wq": L.init_linear(ks[0], (d, h * hd)),
+        "wk": L.init_linear(ks[1], (d, kv * hd)),
+        "wv": L.init_linear(ks[2], (d, kv * hd)),
+        "wo_a": L.init_linear(ks[3], (h * hd, d)),
+        "wi": L.init_linear(ks[4], (d, 2 * cfg.d_ff)),
+        "wo": L.init_linear(ks[5], (cfg.d_ff, d)),
+    }
+
+
+def _grouping(cfg: ArchConfig) -> tuple[int, tuple[str, ...]]:
+    glen = len(cfg.block_pattern)
+    ngroups = cfg.num_layers // glen
+    rem = cfg.layer_kinds()[ngroups * glen :]
+    return ngroups, tuple(rem)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    ngroups, rem = _grouping(cfg)
+    keys = jax.random.split(key, len(cfg.block_pattern) + len(rem) + 2)
+    group = []
+    for j, kind in enumerate(cfg.block_pattern):
+        init = _init_rec if kind == "rec" else _init_attn
+        group.append(jax.vmap(lambda k, i=init: i(cfg, k))(jax.random.split(keys[j], ngroups)))
+    remainder = []
+    for j, kind in enumerate(rem):
+        init = _init_rec if kind == "rec" else _init_attn
+        remainder.append(init(cfg, keys[len(cfg.block_pattern) + j]))
+    return {
+        "embed": L.init_linear(keys[-2], (cfg.vocab_size, cfg.d_model), scale=cfg.d_model ** -0.5),
+        "group": tuple(group),
+        "remainder": tuple(remainder),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": L.init_linear(keys[-1], (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sublayer forward
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, conv_w, carry=None):
+    """Width-cw causal conv over time. x: [B,T,W]; carry: [B,cw-1,W]|None."""
+    cw = conv_w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, j : j + x.shape[1]] * conv_w[cw - 1 - j] for j in range(cw))
+    return out, xp[:, -(cw - 1) :]
+
+
+def _rg_lru(x, blk, h0=None):
+    """x: [B,T,W] -> (h [B,T,W], h_last [B,W]). Linear recurrence via
+    associative scan; gates computed from the branch input."""
+    r = jax.nn.sigmoid(x @ blk["wa"])
+    i = jax.nn.sigmoid(x @ blk["wi_g"])
+    log_a = -_C * jax.nn.softplus(blk["a_param"]) * r          # <= 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = x * i * mult
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def comb(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def _rec_layer(cfg, x, blk, state=None):
+    """Recurrent temporal block + MLP. state: {'h': [B,W], 'conv': [B,cw-1,W]}"""
+    dt = x.dtype
+    y = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(y @ blk["w_gate"].astype(dt))
+    # recurrent branch in f32 for stability; carried state is f32
+    u = (y @ blk["w_in"].astype(dt)).astype(jnp.float32)
+    u, conv_carry = _causal_conv(u, blk["conv_w"], state["conv"] if state else None)
+    h, h_last = _rg_lru(u, blk, state["h"] if state else None)
+    x = x + ((gate.astype(jnp.float32) * h) @ blk["w_out"]).astype(x.dtype)
+    y2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    x = x + L.gated_mlp(y2, blk["wi"].astype(dt), blk["wo"].astype(dt), cfg.act)
+    new_state = {"h": h_last, "conv": conv_carry}
+    return x, new_state
+
+
+def _attn_layer(cfg, x, blk, pos, cache=None, kv_len=None):
+    """Local MQA temporal block + MLP. cache: [2,B,S,KV,hd] | None."""
+    dt = x.dtype
+    b, t, d = x.shape
+    hd, h, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    y = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    q = L.rope((y @ blk["wq"].astype(dt)).reshape(b, t, h, hd), pos, cfg.rope_theta)
+    k = L.rope((y @ blk["wk"].astype(dt)).reshape(b, t, kv, hd), pos, cfg.rope_theta)
+    v = (y @ blk["wv"].astype(dt)).reshape(b, t, kv, hd)
+    new_cache = None
+    q_off = 0
+    att_kv_len = None
+    if cache is not None:
+        start = jnp.asarray(kv_len).reshape(-1)[0] if t == 1 else 0
+        ck = jax.lax.dynamic_update_slice(cache[0], k.astype(cache.dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache[1], v.astype(cache.dtype), (0, start, 0, 0))
+        new_cache = jnp.stack([ck, cv])
+        k, v = ck.astype(q.dtype), cv.astype(q.dtype)
+        q_off = start
+        att_kv_len = (kv_len + t) if kv_len is not None else None
+    att = L.attention(
+        q, k, v, causal=True, window=cfg.sliding_window or 2048,
+        q_offset=q_off, kv_len=att_kv_len,
+    )
+    x = x + att.reshape(b, t, h * hd) @ blk["wo_a"].astype(dt)
+    y2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    x = x + L.gated_mlp(y2, blk["wi"].astype(dt), blk["wo"].astype(dt), cfg.act)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    ngroups, rem = _grouping(cfg)
+    w = cfg.lru_width or cfg.d_model
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    def rec_state(stacked: int | None):
+        pre = (stacked,) if stacked else ()
+        return {
+            "h": jnp.zeros(pre + (batch, w), jnp.float32),
+            "conv": jnp.zeros(pre + (batch, cfg.conv_width - 1, w), jnp.float32),
+        }
+    def attn_state(stacked: int | None):
+        pre = (stacked,) if stacked else ()
+        return jnp.zeros(pre + (2, batch, max_len, kv, hd), dtype)
+    group = tuple(
+        rec_state(ngroups) if kind == "rec" else attn_state(ngroups)
+        for kind in cfg.block_pattern
+    )
+    remainder = tuple(
+        rec_state(None) if kind == "rec" else attn_state(None) for kind in rem
+    )
+    return {"group": group, "remainder": remainder, "len": jnp.zeros((), jnp.int32)}
+
+
+def _apply_pattern(cfg, x, group_params, group_state, pos, kv_len):
+    """Scan over pattern groups; returns (x, new group state).
+
+    Stateless (training) when group_state is None.
+    """
+    if group_state is not None:
+        def body(x, scanned):
+            blks, sts = scanned
+            new_sts = []
+            for kind, blk, st in zip(cfg.block_pattern, blks, sts):
+                if kind == "rec":
+                    x, ns = _rec_layer(cfg, x, blk, st)
+                else:
+                    x, ns = _attn_layer(cfg, x, blk, pos, cache=st, kv_len=kv_len)
+                new_sts.append(ns)
+            return x, tuple(new_sts)
+        return jax.lax.scan(body, x, (group_params, group_state))
+
+    def body(x, blks):
+        for kind, blk in zip(cfg.block_pattern, blks):
+            if kind == "rec":
+                x, _ = _rec_layer(cfg, x, blk, None)
+            else:
+                x, _ = _attn_layer(cfg, x, blk, pos)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, _ = jax.lax.scan(body, x, group_params)
+    return x, None
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    state: dict | None = None,
+    ctx=None,
+) -> tuple[jax.Array, jax.Array, dict | None]:
+    """Train (state=None) or prefill (state given: caches/recurrences fill)."""
+    b, t = tokens.shape
+    x = L.embed(tokens, params["embed"], scale=True).astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(t)
+    stateful = state is not None
+    ngroups, rem = _grouping(cfg)
+    kv_len = jnp.asarray(0, jnp.int32) if stateful else None
+
+    x, new_group = _apply_pattern(
+        cfg, x, params["group"], state["group"] if stateful else None, pos, kv_len
+    )
+    new_rem = []
+    for i, (kind, blk) in enumerate(zip(rem, params["remainder"])):
+        s = state["remainder"][i] if stateful else None
+        if kind == "rec":
+            x, ns = _rec_layer(cfg, x, blk, s)
+        else:
+            x, ns = _attn_layer(cfg, x, blk, pos, cache=s, kv_len=kv_len)
+        new_rem.append(ns)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    from repro.models.transformer import _shard
+    logits = _shard(ctx, logits, ctx.dp if ctx else None, None, ctx.tp_axis if ctx else None)
+    new_state = None
+    if stateful:
+        new_state = {"group": new_group, "remainder": tuple(new_rem), "len": state["len"] + t}
+    return logits, jnp.zeros((), jnp.float32), new_state
+
+
+def decode_step(cfg, params, tokens, state, *, ctx=None):
+    """One token; carries h/conv/local-KV state."""
+    b = tokens.shape[0]
+    x = L.embed(tokens, params["embed"], scale=True).astype(jnp.dtype(cfg.dtype))
+    kv_len = state["len"]
+    pos = kv_len.reshape(1, 1) + jnp.zeros((b, 1), jnp.int32)
+    ngroups, rem = _grouping(cfg)
+
+    x, new_group = _apply_pattern(
+        cfg, x, params["group"], state["group"], pos, kv_len
+    )
+    new_rem = []
+    for kind, blk, s in zip(rem, params["remainder"], state["remainder"]):
+        if kind == "rec":
+            x, ns = _rec_layer(cfg, x, blk, s)
+        else:
+            x, ns = _attn_layer(cfg, x, blk, pos, cache=s, kv_len=kv_len)
+        new_rem.append(ns)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    from repro.models.transformer import _shard
+    logits = _shard(ctx, logits, ctx.dp if ctx else None, None, ctx.tp_axis if ctx else None)
+    return logits, {"group": new_group, "remainder": tuple(new_rem), "len": kv_len + 1}

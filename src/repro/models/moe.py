@@ -1,0 +1,170 @@
+"""Mixture-of-Experts block (qwen3-moe, kimi-k2) with shuffle-based dispatch.
+
+The token->expert dispatch is *the paper's shuffle*: bucket rows (tokens) by
+destination (expert), fixed-capacity AllToAll across the expert-parallel mesh
+axis, local compute, AllToAll back, weighted combine — the identical
+partition/exchange/local-op structure as ``repro.dataframe.ops_dist``.  This
+is the "technique as a first-class framework feature" integration point
+(DESIGN.md §4).
+
+Two dispatch modes with identical semantics (tested against each other):
+- local  : no mesh; sort-based bucketing + grouped einsum (smoke tests, CPU)
+- ep     : shard_map island over the `model` axis — experts sharded, tokens
+           routed via all_to_all (the production path in the dry-run)
+
+Capacity-factor token dropping follows the standard MoE recipe; dropped
+tokens contribute zero (residual passes them through).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+
+def init_moe_block(cfg: ArchConfig, key: jax.Array, lcount: int) -> dict:
+    """Expert tensors are padded to `num_experts_padded` so the expert dim
+    divides the joint ('data','model') EP axis (256 ranks) — dead experts
+    are never routed to (router stays `num_experts` wide) and cost only
+    their (sharded) memory.  Hillclimb iteration K2 (EXPERIMENTS.md)."""
+    e, d, ff = cfg.num_experts_padded, cfg.d_model, cfg.moe_d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "router": L.init_linear(k1, (lcount, d, cfg.num_experts)),
+        "wi": L.init_linear(k2, (lcount, e, d, 2 * ff)),
+        "wo": L.init_linear(k3, (lcount, e, ff, d)),
+    }
+
+
+def _route(x2d: jax.Array, router: jax.Array, cfg: ArchConfig):
+    """Top-k routing. x2d: [N, d] -> (weights [N, k], experts [N, k], aux)."""
+    logits = x2d.astype(jnp.float32) @ router.astype(jnp.float32)  # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.experts_per_token)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    e = cfg.num_experts
+    density = jnp.mean(
+        jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_coef * e * jnp.sum(density * mean_probs)
+    return topv, topi, aux
+
+
+def _bucket_by_expert(x2d, topv, topi, num_experts: int, cap: int):
+    """Scatter (token, slot) pairs into [E, cap, ...] buckets (the partition
+    phase of the shuffle; same algorithm as dataframe.partition)."""
+    n, k = topi.shape
+    flat_e = topi.reshape(-1)                        # [N*k]
+    flat_w = topv.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n * k) - starts[e_sorted]
+    keep = pos < cap
+    slot_row = jnp.where(keep, pos, cap)             # cap == drop row
+    tok_sorted = flat_tok[order]
+    w_sorted = jnp.where(keep, flat_w[order], 0.0)
+
+    buf = jnp.zeros((num_experts, cap + 1, x2d.shape[-1]), x2d.dtype)
+    buf = buf.at[e_sorted, slot_row].set(x2d[tok_sorted], mode="drop")
+    return buf[:, :cap], (e_sorted, slot_row, tok_sorted, w_sorted, keep)
+
+
+def _expert_ffn(buf, wi, wo, act: str):
+    """Grouped FFN: buf [E, C, d] x wi [E, d, 2ff] -> [E, C, d]."""
+    ff = wo.shape[-2]
+    gu = jnp.einsum("ecd,edf->ecf", buf, wi)
+    gate, up = gu[..., :ff], gu[..., ff:]
+    a = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return jnp.einsum("ecf,efd->ecd", a * up, wo)
+
+
+def moe_block(x: jax.Array, moe_params: dict, cfg: ArchConfig, ctx=None):
+    """MoE FFN over x [B, T, d]; returns (out [B, T, d], aux loss scalar)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    b, t, d = x.shape
+    n = b * t
+    x2d = x.reshape(n, d)
+    router = moe_params["router"]
+    wi = moe_params["wi"].astype(compute_dtype)
+    wo = moe_params["wo"].astype(compute_dtype)
+
+    if ctx is not None and ctx.ep_axis is not None:
+        out2d, aux = _moe_ep(x2d, router, wi, wo, cfg, ctx)
+    else:
+        out2d, aux = _moe_local(x2d, router, wi, wo, cfg)
+    return out2d.reshape(b, t, d), aux
+
+
+def _moe_local(x2d, router, wi, wo, cfg: ArchConfig):
+    n = x2d.shape[0]
+    e, k = cfg.num_experts_padded, cfg.experts_per_token
+    cap = int(np.ceil(n * k / cfg.num_experts * cfg.capacity_factor))
+    topv, topi, aux = _route(x2d, router, cfg)
+    buf, (e_sorted, slot_row, tok_sorted, w_sorted, keep) = _bucket_by_expert(
+        x2d, topv, topi, e, cap
+    )
+    out_buf = _expert_ffn(buf, wi, wo, cfg.act)
+    gathered = out_buf[e_sorted, jnp.minimum(slot_row, cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    out = jnp.zeros_like(x2d)
+    out = out.at[tok_sorted].add(gathered * w_sorted[:, None].astype(gathered.dtype))
+    return out, aux
+
+
+def _moe_ep(x2d, router, wi, wo, cfg: ArchConfig, ctx):
+    """Expert-parallel dispatch: shard_map island over ctx.ep_axis.
+
+    Experts are sharded over the `model` axis; each data shard buckets its
+    tokens per-expert and all_to_all's the buckets to the owning shard —
+    the dataframe shuffle, verbatim, at the tensor level.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axes = ctx.ep_axis if isinstance(ctx.ep_axis, tuple) else (ctx.ep_axis,)
+    e, k = cfg.num_experts_padded, cfg.experts_per_token
+    sizes = dict(ctx.mesh.shape)
+    ep_size = 1
+    for a in axes:
+        ep_size *= sizes[a]
+    n_in = x2d.shape[0]
+    pad = (-n_in) % ep_size
+    if pad:  # decode-scale batches: pad tokens to divide the EP axis
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+
+    def island(x_local, router_l, wi_local, wo_local):
+        n_local = x_local.shape[0]
+        cap = int(np.ceil(n_local * k / cfg.num_experts * cfg.capacity_factor))
+        cap = max(cap, 8)
+        topv, topi, aux = _route(x_local, router_l, cfg)
+        buf, (e_sorted, slot_row, tok_sorted, w_sorted, keep) = _bucket_by_expert(
+            x_local, topv, topi, e, cap
+        )
+        # shuffle: [E, cap, d] -> [E/p, p*cap, d] on the expert's owner
+        recv = jax.lax.all_to_all(buf, axes, split_axis=0, concat_axis=1, tiled=True)
+        out_recv = _expert_ffn(recv, wi_local, wo_local, cfg.act)
+        # shuffle back: [E/p, p*cap, d] -> [E, cap, d]
+        out_buf = jax.lax.all_to_all(out_recv, axes, split_axis=1, concat_axis=0, tiled=True)
+        gathered = out_buf[e_sorted, jnp.minimum(slot_row, cap - 1)]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        out = jnp.zeros_like(x_local)
+        out = out.at[tok_sorted].add(gathered * w_sorted[:, None].astype(gathered.dtype))
+        return out, jax.lax.pmean(aux, axes)
+
+    out, aux = jax.shard_map(
+        island,
+        mesh=ctx.mesh,
+        in_specs=(P(axes, None), P(None, None), P(axes), P(axes)),
+        out_specs=(P(axes, None), P()),
+        axis_names=frozenset(axes),
+        check_vma=False,
+    )(x2d, router, wi, wo)
+    return out[:n_in], aux

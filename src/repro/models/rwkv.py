@@ -1,0 +1,194 @@
+"""RWKV-6 "Finch" — attention-free SSM family (rwkv6-7b).
+
+Data-dependent per-channel decay (the Finch contribution) with the
+time-mix / channel-mix block structure.  The wkv recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (S: [dk, dv] per head)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+is computed in stable *chunked* form: within a chunk of C steps all decay
+factors appear only as exp(logA_i - logA_j) with i >= j (so every exponent
+is <= 0 — no overflow for any input), and the state is carried across chunks
+by ``lax.scan``.  Decode is the C=1 degenerate case carrying S.
+
+This family has **no KV cache**: `init_state` is O(1) in sequence length,
+which is why rwkv6 runs the long_500k cell (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+_LORA_RANK = 64
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    d, lcount = cfg.d_model, cfg.num_layers
+    ks = jax.random.split(key, 16)
+
+    def stack(k, shape):
+        return L.init_linear(k, (lcount,) + shape)
+
+    blocks = {
+        "ln1": jnp.zeros((lcount, d), jnp.float32),
+        "ln2": jnp.zeros((lcount, d), jnp.float32),
+        # time-mix (token-shift) interpolation factors per r/k/v/w/g
+        "mu": 0.5 * jnp.ones((lcount, 5, d), jnp.float32),
+        "wr": stack(ks[0], (d, d)),
+        "wk": stack(ks[1], (d, d)),
+        "wv": stack(ks[2], (d, d)),
+        "wg": stack(ks[3], (d, d)),
+        "wo": stack(ks[4], (d, d)),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": -6.0 * jnp.ones((lcount, d), jnp.float32),
+        "wA": stack(ks[5], (d, _LORA_RANK)),
+        "wB": stack(ks[6], (_LORA_RANK, d)) * 0.01,
+        "u": 0.5 * jnp.ones((lcount, d), jnp.float32),  # bonus for current token
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((lcount, 2, d), jnp.float32),
+        "ck": stack(ks[7], (d, cfg.d_ff)),
+        "cv": stack(ks[8], (cfg.d_ff, d)),
+        "cr": stack(ks[9], (d, d)),
+    }
+    return {
+        "embed": L.init_linear(ks[10], (cfg.vocab_size, d), scale=1.0),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "lm_head": L.init_linear(ks[11], (d, cfg.vocab_size)),
+    }
+
+
+def _wkv_chunk(S, r, k, v, logw, u, chunk: int):
+    """Process one chunk. S: [B,H,dk,dv]; r,k,v,logw: [B,C,H,dk]; u: [H,dk]."""
+    logA = jnp.cumsum(logw, axis=1)                  # inclusive [B,C,H,dk]
+    logA_excl = logA - logw                          # exclusive
+    # state contribution: o_state[t] = (r_t * exp(logA_excl[t])) @ S
+    r_dec = r * jnp.exp(logA_excl)
+    o_state = jnp.einsum("bchk,bhkv->bchv", r_dec, S)
+    # intra-chunk: score[t,i] = sum_k r[t,k] k[i,k] exp(logA_excl[t]-logA[i]), i < t
+    diff = logA_excl[:, :, None] - logA[:, None, :, :, :]  # [B,C,C,H,dk] (t,i)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    diff = jnp.where(tri[None, :, :, None, None], diff, -jnp.inf)
+    att = jnp.einsum("bthk,bihk,btihk->btih", r, k, jnp.exp(diff))
+    o_intra = jnp.einsum("btih,bihv->bthv", att, v)
+    # current-token bonus: (r_t . (u * k_t)) v_t
+    bonus = jnp.einsum("bchk,hk,bchk->bch", r, u, k)
+    o_bonus = bonus[..., None] * v
+    # state update: S' = diag(exp(logA_C)) S + sum_i exp(logA_C - logA_i) k_i v_i^T
+    logA_C = logA[:, -1][:, None]                    # [B,1,H,dk]
+    k_dec = k * jnp.exp(logA_C - logA)
+    S_new = S * jnp.exp(logA_C[:, 0])[..., None] + jnp.einsum(
+        "bchk,bchv->bhkv", k_dec, v
+    )
+    return S_new, o_state + o_intra + o_bonus
+
+
+def _time_mix(cfg, x, x_prev, blk, S, chunk: int):
+    """x: [B,T,d] (T multiple of chunk); returns (out, S', last_x)."""
+    b, t, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    xx = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # shifted
+    mu = blk["mu"]
+    xr, xk, xv, xw, xg = [x + (xx - x) * mu[i] for i in range(5)]
+    r = (xr @ blk["wr"]).reshape(b, t, h, hs)
+    k = (xk @ blk["wk"]).reshape(b, t, h, hs)
+    v = (xv @ blk["wv"]).reshape(b, t, h, hs)
+    g = jax.nn.silu(xg @ blk["wg"])
+    logw = -jnp.exp(
+        blk["w0"] + jnp.tanh(xw @ blk["wA"]) @ blk["wB"]
+    ).reshape(b, t, h, hs)                            # log decay, always < 0
+    u = blk["u"].reshape(h, hs)
+
+    nchunks = t // chunk
+    def body(S, xs):
+        r_c, k_c, v_c, w_c = xs
+        S, o = _wkv_chunk(S, r_c, k_c, v_c, w_c, u, chunk)
+        return S, o
+
+    rs = r.reshape(b, nchunks, chunk, h, hs).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(b, nchunks, chunk, h, hs).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nchunks, chunk, h, hs).transpose(1, 0, 2, 3, 4)
+    ws = logw.reshape(b, nchunks, chunk, h, hs).transpose(1, 0, 2, 3, 4)
+    S, outs = jax.lax.scan(body, S, (rs, ks_, vs, ws))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, d)
+    out = (out * g) @ blk["wo"]
+    return out, S, x[:, -1]
+
+
+def _channel_mix(x, x_prev, blk):
+    xx = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mu = blk["mu_c"]
+    xk = x + (xx - x) * mu[0]
+    xr = x + (xx - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ blk["ck"]))
+    return jax.nn.sigmoid(xr @ blk["cr"]) * (kk @ blk["cv"]), x[:, -1]
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    d, hs = cfg.d_model, cfg.rwkv_head_size
+    h = d // hs
+    return {
+        "S": jnp.zeros((cfg.num_layers, batch, h, hs, hs), dtype),
+        "x_tm": jnp.zeros((cfg.num_layers, batch, d), dtype),  # time-mix shift
+        "x_cm": jnp.zeros((cfg.num_layers, batch, d), dtype),  # channel-mix shift
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    state: dict | None = None,
+    chunk: int = 16,
+    ctx=None,
+) -> tuple[jax.Array, jax.Array, dict | None]:
+    """Full-sequence logits; optionally carries/returns recurrent state."""
+    b, t = tokens.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"seq {t} not divisible by chunk {chunk}")
+    x = L.embed(tokens, params["embed"], scale=False).astype(jnp.float32)
+    if ctx is not None:
+        x = ctx.shard(x, ctx.dp, None, None)
+    st = state or init_state(cfg, b)
+
+    def body(carry, scanned):
+        x, = carry
+        blk, S, x_tm, x_cm = scanned
+        y = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        att, S_new, x_tm_new = _time_mix(cfg, y, x_tm, blk, S, chunk)
+        x = x + att
+        y2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        ff, x_cm_new = _channel_mix(y2, x_cm, blk)
+        x = x + ff
+        return (x,), (S_new, x_tm_new, x_cm_new)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    (x,), (S_new, x_tm_new, x_cm_new) = jax.lax.scan(
+        body, (x,), (params["blocks"], st["S"], st["x_tm"], st["x_cm"])
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    from repro.models.transformer import _shard
+    logits = _shard(ctx, logits, ctx.dp if ctx else None, None, ctx.tp_axis if ctx else None)
+    new_state = {
+        "S": S_new, "x_tm": x_tm_new, "x_cm": x_cm_new,
+        "len": st["len"] + t,
+    }
+    return logits, jnp.zeros((), jnp.float32), new_state
+
+
+def decode_step(cfg, params, tokens, state, *, ctx=None):
+    """One token through the recurrence (chunk=1)."""
+    logits, _, new_state = forward(cfg, params, tokens, state=state, chunk=1, ctx=ctx)
+    return logits, new_state

@@ -1,0 +1,309 @@
+"""Dense decoder-only transformer — gemma3 / minicpm / starcoder2 /
+h2o-danube / the internvl2 text backbone.
+
+Layer-scanned (stacked [L, ...] params) so 30-94-layer configs compile as one
+HLO while-loop body; mixed local/global attention (gemma3's 5:1) is a
+per-layer scanned `window` scalar, not separate layer types.  The VLM
+frontend stub injects precomputed patch embeddings over the first
+`frontend_tokens` positions.
+
+Three entry points sharing weights:
+- ``forward``      : full-sequence logits (train / prefill)
+- ``prefill``      : forward + KV cache construction
+- ``decode_step``  : one token with cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.models.moe import init_moe_block, moe_block
+
+
+def _layer_windows(cfg: ArchConfig, seq_hint: int = 0) -> jnp.ndarray:
+    """Per-layer SWA window (0 = full attention) as a scanned [L] vector."""
+    kinds = cfg.layer_kinds()
+    win = []
+    for kind in kinds:
+        if kind == "local":
+            win.append(cfg.sliding_window or 1024)
+        elif kind == "global":
+            win.append(cfg.global_window)
+        elif kind == "attn":
+            win.append(cfg.sliding_window)
+        else:
+            raise ValueError(f"dense transformer got layer kind {kind!r}")
+    return jnp.asarray(win, jnp.int32)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    """Stacked-parameter pytree; dtype f32 (cast to cfg.dtype in compute)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv, lcount = cfg.num_heads, cfg.num_kv_heads, cfg.num_layers
+    ks = jax.random.split(key, 12)
+
+    def stack(k, shape):
+        return L.init_linear(k, (lcount,) + shape)
+
+    block: dict[str, Any] = {
+        "ln1": jnp.zeros((lcount, d), jnp.float32),
+        "ln2": jnp.zeros((lcount, d), jnp.float32),
+        "wq": stack(ks[0], (d, h * hd)),
+        "wk": stack(ks[1], (d, kv * hd)),
+        "wv": stack(ks[2], (d, kv * hd)),
+        "wo_att": stack(ks[3], (h * hd, d)),
+    }
+    if cfg.qk_norm:
+        block["qnorm"] = jnp.zeros((lcount, hd), jnp.float32)
+        block["knorm"] = jnp.zeros((lcount, hd), jnp.float32)
+    if cfg.family == "moe":
+        block["moe"] = init_moe_block(cfg, ks[4], lcount)
+        if cfg.n_shared_experts:
+            block["wi_sh"] = stack(ks[5], (d, 2 * cfg.moe_d_ff * cfg.n_shared_experts))
+            block["wo_sh"] = stack(ks[6], (cfg.moe_d_ff * cfg.n_shared_experts, d))
+    else:
+        block["wi"] = stack(ks[5], (d, 2 * cfg.d_ff))
+        block["wo"] = stack(ks[6], (cfg.d_ff, d))
+
+    params = {
+        "embed": L.init_linear(ks[7], (cfg.vocab_size, d), scale=d ** -0.5),
+        "blocks": block,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(ks[8], (d, cfg.vocab_size))
+    return params
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """Distribution context: activation sharding constraints + shard_map
+    islands (MoE dispatch).  ctx=None (smoke tests) makes every hint a no-op.
+    """
+
+    mesh: Any = None
+    ep_axis: str | None = None  # expert-parallel mesh axis ("model")
+    dp_axes: tuple[str, ...] = ()
+    tp_axis: str | None = None
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None
+        )
+
+    def shard(self, x, *spec):
+        """with_sharding_constraint, skipping axes that don't divide."""
+        if self.mesh is None or not spec:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        resolved = []
+        for dim, s in zip(x.shape, spec):
+            if s is None:
+                resolved.append(None)
+                continue
+            names = s if isinstance(s, tuple) else (s,)
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            resolved.append(s if dim % total == 0 and dim >= total else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, PartitionSpec(*resolved))
+        )
+
+
+def _shard(ctx, x, *spec):
+    return ctx.shard(x, *spec) if ctx is not None else x
+
+
+def _block_fn(cfg: ArchConfig, x, blk, window, pos, cache_l=None, kv_len=None, ctx=None):
+    """One transformer layer. cache_l: [2, B, S, KV, hd] or None."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    b, t, d = x.shape
+    hd, h, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+
+    y = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    q = (y @ blk["wq"].astype(compute_dtype)).reshape(b, t, h, hd)
+    k = (y @ blk["wk"].astype(compute_dtype)).reshape(b, t, kv, hd)
+    v = (y @ blk["wv"].astype(compute_dtype)).reshape(b, t, kv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, blk["qnorm"], cfg.norm_eps)
+        k = L.rms_norm(k, blk["knorm"], cfg.norm_eps)
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+
+    new_cache_l = None
+    if cache_l is not None:
+        ck, cv = cache_l[0], cache_l[1]
+        start = jnp.asarray(kv_len).reshape(-1)[0] if t == 1 else 0
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, start, 0, 0))
+        new_cache_l = jnp.stack([ck, cv])
+        k_att, v_att = ck.astype(compute_dtype), cv.astype(compute_dtype)
+        att_kv_len = (kv_len + t) if kv_len is not None else None
+        q_off = start
+    else:
+        k_att, v_att = k, v
+        att_kv_len = None
+        q_off = 0
+
+    if ctx is not None and ctx.mesh is not None and t > 1:
+        att = L.attention_sharded(
+            q, k_att, v_att, ctx,
+            causal=True, window=window, softcap=cfg.attn_softcap,
+            q_offset=q_off, kv_len=att_kv_len,
+        )
+    else:
+        att = L.attention(
+            q, k_att, v_att,
+            causal=True, window=window, softcap=cfg.attn_softcap,
+            q_offset=q_off, kv_len=att_kv_len,
+        )
+    att = att.reshape(b, t, h * hd) @ blk["wo_att"].astype(compute_dtype)
+    x = x + att
+
+    y2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = moe_block(y2, blk["moe"], cfg, ctx)
+        if cfg.n_shared_experts:
+            ff = ff + L.gated_mlp(
+                y2, blk["wi_sh"].astype(compute_dtype), blk["wo_sh"].astype(compute_dtype), cfg.act
+            )
+    else:
+        ff = L.gated_mlp(y2, blk["wi"].astype(compute_dtype), blk["wo"].astype(compute_dtype), cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    return x + ff, new_cache_l, aux
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    ctx: DistContext | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence logits [B, T, V] (+ MoE aux loss scalar)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params["embed"].astype(compute_dtype), scale=True)
+    if prefix_embeds is not None:
+        npfx = prefix_embeds.shape[1]
+        x = x.at[:, :npfx].set(prefix_embeds.astype(compute_dtype))
+    dp = ctx.dp if ctx else None
+    seq_ax = (ctx.tp_axis if (ctx and cfg.seq_shard_activations) else None)
+    x = _shard(ctx, x, dp, seq_ax, None)
+    b, t, _ = x.shape
+    pos = jnp.arange(t)
+    windows = _layer_windows(cfg)
+
+    def body(carry, scanned):
+        x, aux = carry
+        blk, window = scanned
+        x, _, aux_l = _block_fn(cfg, x, blk, window, pos, ctx=ctx)
+        x = _shard(ctx, x, dp, seq_ax, None)
+        return (x, aux + aux_l), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], windows)
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(compute_dtype)
+    logits = _shard(ctx, logits, dp, None, ctx.tp_axis if ctx else None)
+    return logits, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """KV cache [L, 2, B, S, KV, hd] + length scalar.
+
+    Baseline sizes every layer's buffer to `max_len` (the scanned stacked
+    layout wants one shape).  Shrinking SWA layers to ring buffers of
+    `window` slots is a recorded memory-term optimization (EXPERIMENTS.md
+    §Perf), not the baseline.
+    """
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "kv": jnp.zeros((cfg.num_layers, 2, batch, max_len, kv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    cache: dict,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    ctx: DistContext | None = None,
+) -> tuple[jax.Array, dict]:
+    """Run the prompt, filling the cache; returns last-position logits."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params["embed"].astype(compute_dtype), scale=True)
+    if prefix_embeds is not None:
+        x = x.at[:, : prefix_embeds.shape[1]].set(prefix_embeds.astype(compute_dtype))
+    b, t, _ = x.shape
+    pos = jnp.arange(t)
+    windows = _layer_windows(cfg)
+    cache_len = cache["kv"].shape[3]
+
+    def body(x, scanned):
+        blk, window, cache_l = scanned
+        x, new_cache_l, _ = _block_fn(cfg, x, blk, window, pos, cache_l=cache_l, kv_len=0, ctx=ctx)
+        return x, new_cache_l
+
+    x, new_kv = jax.lax.scan(body, x, (params["blocks"], windows, cache["kv"]))
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(compute_dtype)
+    logits = _shard(ctx, logits, ctx.dp if ctx else None, None, ctx.tp_axis if ctx else None)
+    return logits, {"kv": new_kv, "len": jnp.asarray(t, jnp.int32)}
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    cache: dict,
+    *,
+    ctx: DistContext | None = None,
+) -> tuple[jax.Array, dict]:
+    """One decode step: tokens [B, 1] -> logits [B, 1, V], updated cache."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params["embed"].astype(compute_dtype), scale=True)
+    b = x.shape[0]
+    kv_len = cache["len"]
+    pos = kv_len.reshape(1, 1) + jnp.zeros((b, 1), jnp.int32)
+    windows = _layer_windows(cfg)
+
+    def body(x, scanned):
+        blk, window, cache_l = scanned
+        x, new_cache_l, _ = _block_fn(
+            cfg, x, blk, window, pos, cache_l=cache_l, kv_len=kv_len, ctx=ctx
+        )
+        return x, new_cache_l
+
+    x, new_kv = jax.lax.scan(body, x, (params["blocks"], windows, cache["kv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(compute_dtype)
+    logits = _shard(ctx, logits, ctx.dp if ctx else None, None, ctx.tp_axis if ctx else None)
+    return logits, {"kv": new_kv, "len": kv_len + 1}

@@ -1,0 +1,3 @@
+"""Serving substrate: prefill / decode steps with KV or recurrent state."""
+
+from repro.serve.serve_step import make_serve_step, make_prefill_step, greedy_sample  # noqa: F401

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer (AdamW + WSD, int8 state), train step."""
+
+from repro.train.optimizer import OptConfig, init_state, apply_updates, lr_at  # noqa: F401
+from repro.train.train_step import make_train_step, make_eval_step  # noqa: F401

