@@ -1,0 +1,99 @@
+"""Forward-compat shims for older jax releases (this repo pins the call
+sites to the modern public spellings).
+
+Installed on ``import repro`` so library code, tests, and the spawned SPMD
+subprocesses (tests/test_spmd.py imports ``repro.*`` before touching the
+mesh APIs) can uniformly use:
+
+- ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  (older jax only has ``jax.experimental.shard_map.shard_map`` with the
+  ``check_rep`` spelling of the replication check)
+- ``jax.sharding.AbstractMesh(axis_sizes, axis_names)``
+  (older jax takes a single ``((name, size), ...)`` tuple)
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+_installed = False
+
+
+def _shard_map_impl():
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map, True
+    from jax.experimental.shard_map import shard_map  # noqa: PLC0415
+
+    return shard_map, False
+
+
+def _install_shard_map() -> None:
+    impl, public = _shard_map_impl()
+    params = inspect.signature(impl).parameters
+    if public and "check_vma" in params:
+        return  # modern jax: nothing to do
+
+    @functools.wraps(impl)
+    def shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs and "check_vma" not in params:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if "axis_names" in kwargs and "axis_names" not in params:
+            # modern: axis_names = the manual axes, the rest stay "auto"
+            # (sharding propagation).  Old shard_map's auto= param crashes
+            # the XLA partitioner on these graphs, so fall back to fully
+            # manual: unmentioned axes are treated as replicated, which is
+            # semantically equivalent for every island in this repo (they
+            # never reference the auto axes in their specs or collectives).
+            kwargs.pop("axis_names")
+        return impl(f, *args, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_abstract_mesh() -> None:
+    real = jax.sharding.AbstractMesh
+    try:
+        names = list(inspect.signature(real).parameters)
+    except (TypeError, ValueError):  # pragma: no cover - C-accelerated init
+        names = []
+    if "axis_names" in names:
+        return  # modern jax: nothing to do
+
+    class AbstractMesh(real):  # noqa: N801 - matches the jax class name
+        def __init__(self, axis_sizes, axis_names=None, **kwargs):
+            if axis_names is None:  # old-style ((name, size), ...) call
+                super().__init__(axis_sizes, **kwargs)
+            else:
+                super().__init__(tuple(zip(axis_names, axis_sizes)), **kwargs)
+
+    jax.sharding.AbstractMesh = AbstractMesh
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        """Static size of a named mesh axis (inside shard_map).  Old jax:
+        ``jax.core.axis_frame`` resolves the bound size directly."""
+        if isinstance(axis_name, (tuple, list)):
+            n = 1
+            for a in axis_name:
+                n *= int(jax.core.axis_frame(a))
+            return n
+        return int(jax.core.axis_frame(axis_name))
+
+    jax.lax.axis_size = axis_size
+
+
+def install() -> None:
+    global _installed
+    if _installed:
+        return
+    _install_shard_map()
+    _install_abstract_mesh()
+    _install_axis_size()
+    _installed = True

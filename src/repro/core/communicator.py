@@ -81,7 +81,10 @@ class Communicator:
         self.world_size = int(world_size)
         self.channel = channel or netsim.LAMBDA_DIRECT
         self.events: list[CommEvent] = []
-        self._pending: list[tuple[str, Any]] = []  # non-blocking handles
+        # non-blocking handles: id -> (kind, result); popped on wait() so a
+        # long BSP run can issue millions of iops without growing this map
+        self._pending: dict[int, tuple[str, Any]] = {}
+        self._next_handle = 0
 
     # -- accounting ---------------------------------------------------------
 
@@ -199,16 +202,29 @@ class Communicator:
         self._record(CollectiveKind.BCAST, _nbytes(x))
         return [np.asarray(x).copy() for _ in range(self.world_size)]
 
-    def gather(self, xs: Sequence[np.ndarray], root: int = 0) -> list[np.ndarray] | None:
+    def gather(
+        self, xs: Sequence[np.ndarray], root: int = 0
+    ) -> list[list[np.ndarray] | None]:
+        """Rooted gather: ``out[root]`` is the list of every rank's
+        contribution; non-root ranks receive ``None`` (MPI_Gather semantics).
+
+        Wire pricing: the root's own contribution never leaves the node, so
+        only ``(P-1)/P`` of the payload is charged.
+        """
         self._check_world(xs)
         self._check_rank(root)
-        self._record(CollectiveKind.GATHER, max(_nbytes(x) for x in xs))
-        return [np.asarray(x).copy() for x in xs]
+        wire = sum(_nbytes(x) for r, x in enumerate(xs) if r != root)
+        self._record(CollectiveKind.GATHER, -(-wire // self.world_size))
+        gathered = [np.asarray(x).copy() for x in xs]
+        return [gathered if r == root else None for r in range(self.world_size)]
 
     def scatter(self, chunks: Sequence[np.ndarray], root: int = 0) -> list[np.ndarray]:
+        """Rooted scatter: rank ``r`` receives only ``chunks[r]``; the root's
+        chunk stays local, so ``(P-1)/P`` of the payload is charged."""
         self._check_world(chunks)
         self._check_rank(root)
-        self._record(CollectiveKind.SCATTER, max(_nbytes(x) for x in chunks))
+        wire = sum(_nbytes(x) for r, x in enumerate(chunks) if r != root)
+        self._record(CollectiveKind.SCATTER, -(-wire // self.world_size))
         return [np.asarray(x).copy() for x in chunks]
 
     def send(self, x: np.ndarray, dst: int) -> None:
@@ -218,14 +234,40 @@ class Communicator:
     # -- non-blocking surface (paper §VI: "our design called for non-blocking
     #    I/O"); simulation completes eagerly but preserves the handle protocol.
 
+    def _issue(self, kind: str, res: Any) -> int:
+        handle = self._next_handle
+        self._next_handle += 1
+        self._pending[handle] = (kind, res)
+        return handle
+
     def iallreduce(self, xs: Sequence[np.ndarray], op: Callable = np.add) -> int:
-        res = self.allreduce(xs, op)
-        self._pending.append(("allreduce", res))
-        return len(self._pending) - 1
+        return self._issue("allreduce", self.allreduce(xs, op))
+
+    def iallgather(self, xs: Sequence[np.ndarray]) -> int:
+        return self._issue("allgather", self.allgather(xs))
+
+    def iallgatherv(self, xs: Sequence[np.ndarray]) -> int:
+        return self._issue("allgatherv", self.allgatherv(xs))
+
+    def ialltoallv(self, sends: Sequence[Sequence[np.ndarray]]) -> int:
+        return self._issue("alltoallv", self.alltoallv(sends))
 
     def wait(self, handle: int) -> Any:
-        kind, res = self._pending[handle]
+        """Complete a non-blocking op.  Handles are single-use: the result is
+        released on wait (bounding memory across a long BSP run) and a second
+        wait on the same handle raises instead of silently re-reading."""
+        try:
+            kind, res = self._pending.pop(handle)
+        except KeyError:
+            raise ValueError(
+                f"unknown or already-waited handle {handle!r} "
+                f"(outstanding: {sorted(self._pending)})"
+            ) from None
         return res
+
+    @property
+    def outstanding_handles(self) -> int:
+        return len(self._pending)
 
     def ping(self, peer: int) -> bool:
         """Keepalive to prevent eager socket termination (paper §VI)."""

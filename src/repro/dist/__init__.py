@@ -1,0 +1,16 @@
+"""Distribution substrate: sharding rules, atomic checkpointing, and
+int8 error-feedback gradient compression.
+
+This is the state-externalization layer the paper's serverless design
+needs (§VI fault tolerance): functions are short-lived, so training state
+must live outside any one process (``checkpoint``), the parameter layout
+must be derivable from config alone on any elastic restart (``sharding``),
+and bytes on the wire — the dominant cost at scale (§IV–V) — get the int8
+treatment (``compression``).
+
+- ``repro.dist.sharding``     PartitionSpec rules for params / batches / caches
+- ``repro.dist.checkpoint``   atomic save / restore / latest (tmp-dir rename)
+- ``repro.dist.compression``  block int8 quantization + compressed_pmean
+"""
+
+from repro.dist import checkpoint, compression, sharding  # noqa: F401

@@ -1,0 +1,150 @@
+"""Atomic local checkpointing for elastic (kill/resume) training.
+
+Lambda-style workers have a bounded lifetime (paper §VI), so training state
+must be externalized at a cadence and restorable by a *fresh* process that
+only knows the config.  The layout is deliberately boring:
+
+    <dir>/step_00000420/
+        manifest.json   step, user extra, and per-leaf path/shape/dtype
+        arrays.npz      one entry per pytree leaf
+
+Atomicity: everything is written into ``<dir>/.tmp-<uuid>`` and the
+directory is renamed into place with ``os.replace`` — a reader either sees
+a complete checkpoint or none at all, and a killed writer leaves only a
+``.tmp-*`` dir that the next ``save`` sweeps up.
+
+``restore`` is shape-strict: a leaf present in ``like_tree`` but absent in
+the checkpoint raises ``KeyError``; a shape mismatch raises ``ValueError``.
+Silent partial restores are how elastic restarts corrupt runs.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import os
+import uuid
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+from repro.dist.treepath import path_str as _key_str
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+_STEP_PREFIX = "step_"
+
+
+def _step_name(step: int) -> str:
+    return f"{_STEP_PREFIX}{step:08d}"
+
+
+def _storable(arr: np.ndarray) -> np.ndarray:
+    """npz only round-trips builtin dtypes; store bf16 & friends as raw
+    same-width integers (the manifest keeps the real dtype)."""
+    if arr.dtype.kind in "biufc?":
+        return arr
+    return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+
+
+def _sweep_tmp(directory: Path) -> None:
+    for stale in directory.glob(".tmp-*"):
+        shutil.rmtree(stale, ignore_errors=True)
+
+
+def save(directory: str | Path, step: int, tree: Any, extra: dict | None = None) -> Path:
+    """Write ``tree`` as checkpoint ``step`` under ``directory`` atomically;
+    returns the final checkpoint path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    _sweep_tmp(directory)
+    final = directory / _step_name(step)
+    tmp = directory / f".tmp-{uuid.uuid4().hex[:8]}"
+    tmp.mkdir()
+    try:
+        leaves, _ = tree_flatten_with_path(tree)
+        arrays: dict[str, np.ndarray] = {}
+        meta: dict[str, dict] = {}
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[f"a{i}"] = _storable(arr)
+            meta[_key_str(path)] = {
+                "i": i,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        np.savez(tmp / _ARRAYS, **arrays)
+        manifest = {
+            "format": 1,
+            "step": int(step),
+            "extra": extra or {},
+            "leaves": meta,
+        }
+        (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=1))
+        if final.exists():  # re-save of a step: replace, still atomically
+            graveyard = directory / f".tmp-old-{uuid.uuid4().hex[:8]}"
+            os.replace(final, graveyard)
+            os.replace(tmp, final)
+            shutil.rmtree(graveyard, ignore_errors=True)
+        else:
+            os.replace(tmp, final)
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+        _sweep_tmp(directory)
+    return final
+
+
+def read_manifest(path: str | Path) -> dict:
+    return json.loads((Path(path) / _MANIFEST).read_text())
+
+
+def restore(path: str | Path, like_tree: Any) -> Any:
+    """Load a checkpoint into the structure of ``like_tree``.
+
+    Raises ``KeyError`` for leaves missing from the checkpoint and
+    ``ValueError`` for shape mismatches (elastic restarts must never
+    silently reinterpret state).
+    """
+    path = Path(path)
+    manifest = read_manifest(path)
+    leaves_meta = manifest["leaves"]
+    with np.load(path / _ARRAYS) as data:
+        like_leaves, treedef = tree_flatten_with_path(like_tree)
+        out = []
+        for p, like in like_leaves:
+            key = _key_str(p)
+            if key not in leaves_meta:
+                raise KeyError(
+                    f"checkpoint {path} has no leaf {key!r} "
+                    f"(has: {sorted(leaves_meta)[:8]}...)"
+                )
+            m = leaves_meta[key]
+            if tuple(m["shape"]) != tuple(like.shape):
+                raise ValueError(
+                    f"shape mismatch for {key!r}: checkpoint "
+                    f"{tuple(m['shape'])} vs expected {tuple(like.shape)}"
+                )
+            raw = data[f"a{m['i']}"]
+            dtype = jnp.dtype(m["dtype"])
+            if raw.dtype != dtype:
+                raw = raw.view(dtype)
+            out.append(jnp.asarray(raw))
+    return tree_unflatten(treedef, out)
+
+
+def latest(directory: str | Path) -> Path | None:
+    """Newest complete checkpoint under ``directory`` (None when empty)."""
+    directory = Path(directory)
+    if not directory.is_dir():
+        return None
+    steps = sorted(
+        p
+        for p in directory.iterdir()
+        if p.is_dir() and p.name.startswith(_STEP_PREFIX) and (p / _MANIFEST).exists()
+    )
+    return steps[-1] if steps else None

@@ -1,0 +1,244 @@
+"""Sharding rules: config + shapes -> PartitionSpec trees.
+
+One rule engine covers all ten architectures and the optimizer state that
+mirrors them.  Placement is name-driven (Megatron conventions) and every
+proposed axis is divisibility-checked against the actual dim, so a rule
+that doesn't apply to a given family/config silently degrades to
+replication instead of producing an invalid spec:
+
+- column-parallel (``wq``/``wk``/``wi``/...): last dim over 'model'
+- row-parallel (``wo``/``cv``/``xo``/...):    second-to-last dim over 'model'
+- MoE expert tensors: expert dim over the *joint* ('data','model') EP axis
+  (hillclimb K2 — experts are padded so E divides the joint axis)
+- embeddings: vocab over 'model' when divisible, else d_model
+- norms / gates / scalars: replicated
+- ZeRO (``cfg.zero_partition``): the largest still-unsharded non-layer dim
+  of every large tensor additionally shards over the dp axes, which is what
+  lets the int8 optimizer state of a 1T-param tree fit 16 GB chips.
+
+Optimizer-state trees reuse these rules verbatim: ``m``/``v`` mirror the
+parameter shapes (int8 moments keep the param shape for ``q`` and get the
+trailing dim divided by the block for ``scale`` — the divisibility check
+re-derives the right spec), so ZeRO partitioning falls out here rather than
+being special-cased in the optimizer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+from repro.dist.treepath import path_parts as _path_names
+from repro.models.config import ArchConfig
+
+# parameter-name placement tables (shared across families; names that only
+# exist in some families are simply never looked up for the others)
+_COL_PARALLEL = {
+    # transformer / encdec / griffin attention + MLPs
+    "wq", "wk", "wv", "wi", "wi_sh", "xq", "xk", "xv",
+    # rwkv time-mix / channel-mix
+    "wr", "wg", "wA", "ck", "cr",
+    # griffin recurrent branch
+    "w_in", "w_gate", "wa", "wi_g", "conv_w",
+    # routers / heads
+    "router", "lm_head",
+}
+_ROW_PARALLEL = {
+    "wo", "wo_att", "wo_a", "wo_m", "wo_sh", "wo_x", "xo", "cv", "wB", "w_out",
+}
+_EXPERT = {"wi", "wo"}  # under a "moe" path component
+# optimizer-state / quantization wrappers whose name is not the rule key
+_WRAPPERS = {"m", "v", "q", "scale"}
+
+_ZERO_MIN_SIZE = 1 << 16  # don't bother dp-sharding small tensors
+
+
+def mesh_axes(mesh) -> tuple[tuple[str, ...], str]:
+    """(dp_axes, tp_axis) for a production mesh.
+
+    'model' is tensor-parallel; every other axis (incl. 'pod') is data
+    parallel. Falls back to last-axis-is-tp for unnamed conventions.
+    """
+    names = tuple(mesh.axis_names)
+    tp = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != tp)
+    return dp, tp
+
+
+def ep_axes(cfg: ArchConfig, mesh) -> tuple[str, ...]:
+    """Joint expert-parallel axes: dp (minus 'pod') + tp (hillclimb K2)."""
+    dp, tp = mesh_axes(mesh)
+    return tuple(a for a in dp if a != "pod") + (tp,)
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    shape = mesh.shape  # Mesh and AbstractMesh: mapping of axis name -> size
+    return {name: int(shape[name]) for name in mesh.axis_names}
+
+
+def _rule_name(names: list[str]) -> str:
+    """Innermost path component that names a parameter (skips m/v/q/scale
+    optimizer wrappers and tuple indices)."""
+    for n in reversed(names):
+        if n in _WRAPPERS or n.isdigit():
+            continue
+        return n
+    return names[-1] if names else ""
+
+
+def _joint(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _divides(dim: int, axes, sizes: dict[str, int]) -> bool:
+    names = axes if isinstance(axes, tuple) else (axes,)
+    return dim % math.prod(sizes[a] for a in names) == 0
+
+
+def _leaf_spec(
+    names: list[str],
+    shape: tuple[int, ...],
+    sizes: dict[str, int],
+    dp: tuple[str, ...],
+    tp: str,
+    ep: tuple[str, ...],
+    cfg: ArchConfig,
+) -> PartitionSpec:
+    ndim = len(shape)
+    if ndim == 0:
+        return PartitionSpec()
+    dims: list[Any] = [None] * ndim
+    name = _rule_name(names)
+    in_moe = "moe" in names
+    size = math.prod(shape)
+
+    if in_moe and name in _EXPERT and ndim >= 3:
+        # stacked expert tensor [L, E, ...]: expert dim on the joint EP axis
+        e_dim = 1
+        joint_ep = _joint(ep)
+        if joint_ep is not None and _divides(shape[e_dim], joint_ep, sizes):
+            dims[e_dim] = joint_ep
+        elif _divides(shape[e_dim], tp, sizes):
+            dims[e_dim] = tp
+    elif name == "embed" and ndim == 2:
+        # vocab dim only: a d-sharded table breaks the SPMD partitioning of
+        # the token gather (dynamic-slice over a split d); odd vocabs that
+        # divide neither axis stay replicated (ZeRO below may still take
+        # the vocab dim — never d).
+        if _divides(shape[0], tp, sizes):
+            dims[0] = tp
+        dims[1] = "-"  # poison: excluded from ZeRO, cleared below
+    elif name in _ROW_PARALLEL and ndim >= 2:
+        if _divides(shape[-2], tp, sizes):
+            dims[-2] = tp
+    elif name in _COL_PARALLEL and ndim >= 2:
+        if _divides(shape[-1], tp, sizes):
+            dims[-1] = tp
+    # everything else (norms, gates, mu/u/w0/a_param, scalars): replicated
+
+    used = {
+        a
+        for d in dims
+        if d is not None and d != "-"
+        for a in (d if isinstance(d, tuple) else (d,))
+    }
+    dp_free = tuple(a for a in dp if a not in used)
+    if cfg.zero_partition and dp_free and size >= _ZERO_MIN_SIZE:
+        # ZeRO: free dp axes on the largest unassigned dim.  Dim 0 of stacked
+        # (>=3-d) tensors is the scanned layer dim — leave it whole.
+        joint_dp = _joint(dp_free)
+        candidates = sorted(
+            (i for i in range(ndim) if dims[i] is None and not (ndim >= 3 and i == 0)),
+            key=lambda i: -shape[i],
+        )
+        for i in candidates:
+            if _divides(shape[i], joint_dp, sizes):
+                dims[i] = joint_dp
+                break
+
+    return PartitionSpec(*(None if d == "-" else d for d in dims))
+
+
+def param_specs(cfg: ArchConfig, tree: Any, mesh) -> Any:
+    """PartitionSpec tree mirroring ``tree`` (params or optimizer state)."""
+    sizes = _axis_sizes(mesh)
+    dp, tp = mesh_axes(mesh)
+    ep = ep_axes(cfg, mesh)
+    leaves, treedef = tree_flatten_with_path(tree)
+    specs = [
+        _leaf_spec(_path_names(path), tuple(leaf.shape), sizes, dp, tp, ep, cfg)
+        for path, leaf in leaves
+    ]
+    return tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ArchConfig, tree: Any, mesh) -> Any:
+    """Model inputs: batch dim over all dp axes, rest replicated."""
+    sizes = _axis_sizes(mesh)
+    dp, _ = mesh_axes(mesh)
+    joint_dp = _joint(dp)
+
+    def spec_of(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return PartitionSpec()
+        dims: list[Any] = [None] * len(shape)
+        if joint_dp is not None and _divides(shape[0], joint_dp, sizes):
+            dims[0] = joint_dp
+        return PartitionSpec(*dims)
+
+    return jax.tree.map(spec_of, tree)
+
+
+def cache_specs(cfg: ArchConfig, tree: Any, mesh, global_batch: int) -> Any:
+    """Decode state (KV caches / recurrent state): batch dim over dp, the
+    kv-heads dim of attention caches over 'model'."""
+    sizes = _axis_sizes(mesh)
+    dp, tp = mesh_axes(mesh)
+    joint_dp = _joint(dp)
+    kv = cfg.num_kv_heads
+
+    def spec_of(path, leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return PartitionSpec()
+        dims: list[Any] = [None] * len(shape)
+        b_dim = next((i for i, s in enumerate(shape) if s == global_batch), None)
+        if (
+            b_dim is not None
+            and joint_dp is not None
+            and _divides(global_batch, joint_dp, sizes)
+        ):
+            dims[b_dim] = joint_dp
+        if len(shape) >= 5:  # [..., B, S, KV, hd] attention cache layout
+            kv_dim = next(
+                (
+                    i
+                    for i in range(len(shape) - 2, max(len(shape) - 3, 0) - 1, -1)
+                    if shape[i] == kv and i != b_dim
+                ),
+                None,
+            )
+            if kv_dim is not None and _divides(kv, tp, sizes):
+                dims[kv_dim] = tp
+        return PartitionSpec(*dims)
+
+    leaves, treedef = tree_flatten_with_path(tree)
+    return tree_unflatten(
+        treedef, [spec_of(path, leaf) for path, leaf in leaves]
+    )
+
+
+def shardings_for(mesh, specs: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda s: isinstance(s, PartitionSpec),
+    )

@@ -1,0 +1,28 @@
+"""Shared pytree key-path stringifier.
+
+Checkpoint manifests key leaves by path and the sharding rule engine
+matches rules by path component — both must render a ``jax.tree_util``
+key path identically, so the cascade lives here once.
+"""
+
+from __future__ import annotations
+
+
+def path_parts(path) -> list[str]:
+    """One string per key-path component (DictKey / SequenceKey / attr)."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key kinds
+            parts.append(str(p))
+    return parts
+
+
+def path_str(path) -> str:
+    parts = path_parts(path)
+    return "/".join(parts) if parts else "."

@@ -173,6 +173,8 @@ def run_cell(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = hlo_analysis.analyze(hlo, chips)
     mf = hlo_analysis.model_flops(cfg, cell)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.data import pipeline
 from repro.dist import checkpoint as ckpt
+from repro.dist import compression
 from repro.models import api
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
@@ -61,8 +62,16 @@ def train(
     ckpt_every: int = 50,
     log_every: int = 10,
     resume: bool = False,
+    stop_after: int | None = None,
     log=print,
 ):
+    """Train ``cfg`` for ``steps`` steps.
+
+    ``stop_after`` simulates a bounded worker lifetime (preemption drill):
+    the LR schedule stays pinned to ``steps`` but the loop exits after that
+    many global steps — a later ``resume=True`` call with the same ``steps``
+    continues the identical trajectory from the latest checkpoint.
+    """
     opt_cfg = opt.OptConfig(
         lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps,
         schedule=cfg.schedule, state_dtype=cfg.opt_state_dtype,
@@ -77,11 +86,20 @@ def train(
         start = ckpt.read_manifest(latest)["step"]
         log(f"resumed from step {start}")
 
+    if cfg.grad_compression:
+        rep = compression.wire_bytes_saved(params)
+        log(f"grad compression: int8+scales {rep['compressed_bytes']/2**20:.1f} MiB "
+            f"vs bf16 {rep['bf16_bytes']/2**20:.1f} MiB "
+            f"({rep['ratio_vs_bf16']:.2f}x) per exchange")
+
     step_fn = jax.jit(make_train_step(cfg, opt_cfg))
-    it = data_iter(cfg, batch, seq_len)
+    # seed the iterator at `start` so a resumed run consumes the same data
+    # shards an uninterrupted run would (loss-trace continuity across kills)
+    it = data_iter(cfg, batch, seq_len, seed=start)
     losses = []
     t0 = time.time()
-    for step in range(start, steps):
+    end = steps if stop_after is None else min(steps, stop_after)
+    for step in range(start, end):
         batch_data = next(it)
         params, opt_state, metrics = step_fn(params, opt_state, batch_data)
         losses.append(float(metrics["loss"]))
@@ -91,6 +109,10 @@ def train(
                 f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)")
         if ckpt_dir and (step + 1) % ckpt_every == 0:
             ckpt.save(ckpt_dir, step + 1, {"params": params, "opt": opt_state})
+    # checkpoint on the way out (graceful preemption / end of run) so a
+    # stop_after drill never exits with unsaved progress
+    if ckpt_dir and end > start and end % ckpt_every != 0:
+        ckpt.save(ckpt_dir, end, {"params": params, "opt": opt_state})
     return params, losses
 
 
@@ -102,16 +124,23 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--stop-after", type=int, default=None,
+                    help="exit after this many global steps (preemption drill)")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     _, losses = train(
         cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
-        ckpt_dir=args.ckpt_dir, resume=args.resume,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume, stop_after=args.stop_after,
     )
-    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+    else:
+        print("no steps to run (already at or past the target step)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+"""Minimal deterministic stand-in for ``hypothesis`` on bare environments.
+
+The tier-1 suite must *collect and run* in containers where only pytest +
+jax exist (the CI image installs the real hypothesis from
+requirements-dev.txt; this fallback keeps laptops/sandboxes green).  It
+implements exactly the surface these tests use — ``given``, ``settings``,
+``st.integers``, ``st.lists``, ``st.data`` — by drawing each example from a
+seeded PRNG, so runs are reproducible, just not shrinking/adaptive.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _lists(
+    elements: _Strategy,
+    *,
+    min_size: int = 0,
+    max_size: int = 20,
+    unique: bool = False,
+) -> _Strategy:
+    def draw(rng: random.Random):
+        size = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements._draw(rng) for _ in range(size)]
+        out: list = []
+        seen: set = set()
+        attempts = 0
+        while len(out) < size and attempts < 50 * (size + 1):
+            v = elements._draw(rng)
+            attempts += 1
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+
+    return _Strategy(draw)
+
+
+class _DataObject:
+    """Interactive draws (``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy._draw(self._rng)
+
+
+_DATA_SENTINEL = _Strategy(None)
+
+
+def _data() -> _Strategy:
+    return _DATA_SENTINEL
+
+
+st = SimpleNamespace(integers=_integers, lists=_lists, data=_data)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):  # args carries `self` for methods
+            for example in range(n_examples):
+                rng = random.Random(0xC0FFEE ^ (example * 7919))
+                drawn = [
+                    _DataObject(rng) if s is _DATA_SENTINEL else s._draw(rng)
+                    for s in strategies
+                ]
+                fn(*args, *drawn, **kwargs)
+
+        # pytest must not resolve the drawn arguments as fixtures
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

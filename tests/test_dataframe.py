@@ -3,7 +3,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic shim (see requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import make_communicator
 from repro.dataframe import Table, ops_dist, ops_local

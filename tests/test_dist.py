@@ -5,7 +5,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic shim (see requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.dist import checkpoint as ckpt
 from repro.dist import compression

@@ -44,6 +44,28 @@ class TestTrainLoop:
                            log=lambda *a: None)
         assert len(losses2) == 10  # only the remaining steps ran
 
+    def test_elastic_restart_trace_continuity(self, tmp_path):
+        """Kill/resume equals one uninterrupted run: train 20 steps straight,
+        then train 10 + drop every in-process object + resume from
+        ckpt.latest — the two loss traces must agree step for step."""
+        from repro.dist import checkpoint as ckpt
+
+        cfg = configs.get("minicpm-2b").reduced(num_layers=2, d_model=64, d_ff=128)
+        kw = dict(batch=2, seq_len=32, ckpt_every=10, log=lambda *a: None)
+        _, ref = train(cfg, steps=20, ckpt_dir=tmp_path / "ref", **kw)
+
+        _, first = train(cfg, steps=20, stop_after=10,
+                         ckpt_dir=tmp_path / "elastic", **kw)
+        # the "Lambda timeout": nothing survives but the checkpoint dir
+        latest = ckpt.latest(tmp_path / "elastic")
+        assert latest is not None and latest.name == "step_00000010"
+        assert ckpt.read_manifest(latest)["step"] == 10
+
+        _, rest = train(cfg, steps=20, ckpt_dir=tmp_path / "elastic",
+                        resume=True, **kw)
+        assert len(first) == 10 and len(rest) == 10
+        np.testing.assert_allclose(first + rest, ref, rtol=1e-4, atol=1e-5)
+
     def test_wsd_schedule_arch(self, tmp_path):
         cfg = configs.get("minicpm-2b").reduced(num_layers=2, d_model=64, d_ff=128)
         assert cfg.schedule == "wsd"
