@@ -18,28 +18,38 @@ LOCAL10_S = 28.8  # paper-anchored 32-node local phase (Table II lambda base)
 
 
 def measured_substrate_times(world: int = 4, rows: int = 4096) -> dict:
-    """Real sim_join through each backend: identical outputs, priced comm."""
+    """Real sim_join through each backend: identical outputs, priced comm.
+
+    Each substrate also runs the compressed shuffle path (columnar codec);
+    staged substrates benefit twice, since their bytes cross the store NIC
+    twice.
+    """
     rng = np.random.default_rng(0)
     keys = rng.permutation(rows).astype(np.int32)
     vals = rng.integers(0, 100, rows).astype(np.int32)
     per = rows // world
     out = {}
     for env in ("direct", "redis", "s3"):
-        tables = [
-            Table.from_dict({"k": keys[i*per:(i+1)*per], "v": vals[i*per:(i+1)*per]},
-                            capacity=per * 2)
-            for i in range(world)
-        ]
-        rtables = [
-            Table.from_dict({"k": keys[i*per:(i+1)*per], "w": vals[i*per:(i+1)*per]},
-                            capacity=per * 2)
-            for i in range(world)
-        ]
+        def tables(names):
+            return [
+                Table.from_dict(
+                    {names[0]: keys[i*per:(i+1)*per], names[1]: vals[i*per:(i+1)*per]},
+                    capacity=per * 2)
+                for i in range(world)
+            ]
         comm = make_communicator(world, env)
-        res = ops_dist.sim_join(tables, rtables, "k", comm)
+        res = ops_dist.sim_join(tables(("k", "v")), tables(("k", "w")), "k", comm)
         total = sum(int(t.count) for t in res)
+        ccomm = make_communicator(world, env)
+        cres = ops_dist.sim_join(
+            tables(("k", "v")), tables(("k", "w")), "k", ccomm, compress=True
+        )
         out[env] = {"rows_joined": total, "comm_s": comm.comm_time_s,
-                    "bytes_on_wire": comm.bytes_on_wire}
+                    "bytes_on_wire": comm.bytes_on_wire,
+                    "compressed_rows_joined": sum(int(t.count) for t in cres),
+                    "compressed_comm_s": ccomm.comm_time_s,
+                    "compressed_bytes_on_wire": ccomm.bytes_on_wire,
+                    "compressed_raw_bytes_on_wire": ccomm.raw_bytes_on_wire}
     return out
 
 
@@ -64,6 +74,12 @@ def main(report=print) -> list[tuple]:
     for env, m in meas.items():
         rows.append((f"substrate_real/{env}", m["comm_s"] * 1e6,
                      f"{m['rows_joined']} rows joined, {m['bytes_on_wire']} wire bytes"))
+        rows.append((
+            f"substrate_real/{env}/compressed", m["compressed_comm_s"] * 1e6,
+            f"{m['compressed_rows_joined']} rows joined, "
+            f"{m['compressed_bytes_on_wire']} wire bytes "
+            f"({m['compressed_raw_bytes_on_wire'] / max(m['compressed_bytes_on_wire'], 1):.2f}x saved)",
+        ))
     model = fig10_model()
     paper = {"direct": 60.0, "redis": 255.0, "s3": 455.0}
     for env, t in model.items():

@@ -3,9 +3,7 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common
 from repro.dataframe import ops_local

@@ -16,10 +16,14 @@ Methodology (honest-reproduction, DESIGN.md §2):
 
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
 import numpy as np
 
 from benchmarks import common
-from repro.core import netsim
+from repro.core import make_communicator, netsim
+from repro.dataframe import Table, ops_dist
 
 # paper Table II/III (seconds, 10 iterations of the join loop)
 PAPER_WEAK = {
@@ -146,6 +150,124 @@ def run() -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Compressed-vs-raw shuffle comparison (the PR-gating bench-smoke artifact)
+# ---------------------------------------------------------------------------
+
+COMPRESSION_WORLDS = (4, 16, 64)
+REPORT_PATH = Path(__file__).resolve().parents[1] / "experiments" / "BENCH_shuffle_compression.json"
+
+
+def _compression_tables(rows: int, world: int, seed: int = 0):
+    """Join inputs with an int32 key, int32 left value, float64 right value —
+    one exact-eligible and one quantization-eligible value column."""
+    rng = np.random.default_rng(seed)
+    per = rows // world
+    keys = rng.permutation(rows).astype(np.int32)
+    vals = rng.integers(0, 1 << 20, rows).astype(np.int32)
+    rk = rng.permutation(rows).astype(np.int32)[: rows // 2]
+    rw = (rng.normal(size=rows // 2) * 100).astype(np.float64)
+    left = [
+        Table.from_dict(
+            {"k": keys[i * per : (i + 1) * per], "v": vals[i * per : (i + 1) * per]},
+            capacity=per * 2,
+        )
+        for i in range(world)
+    ]
+    rper = len(rk) // world
+    right = [
+        Table.from_dict(
+            {"k": rk[i * rper : (i + 1) * rper], "w": rw[i * rper : (i + 1) * rper]},
+            capacity=rper * 2,
+        )
+        for i in range(world)
+    ]
+    return left, right
+
+
+def _join_multiset(tables, float_decimals: int = 3):
+    return sorted(
+        (int(k), int(v), round(float(w), float_decimals))
+        for t in tables
+        for k, v, w in zip(*[t.to_numpy()[c].tolist() for c in ("k", "v", "w")])
+    )
+
+
+def shuffle_compression_report(
+    worlds=COMPRESSION_WORLDS, rows: int = 16384
+) -> dict:
+    """Run the REAL distributed join raw vs compressed at each world size.
+
+    Wire bytes come from the communicator's event log (compressed events
+    price the post-codec bytes and log the logical bytes in ``raw_bytes``);
+    modeled time extrapolates the measured compression ratio to the paper's
+    weak-scaling row counts under the Lambda direct channel.
+    """
+    out: dict = {"rows": rows, "worlds": {}}
+    for w in worlds:
+        left, right = _compression_tables(rows, w)
+        runs = {}
+        results = {}
+        for mode, compress in (("raw", False), ("compressed", True)):
+            comm = make_communicator(w, "direct")
+            res = ops_dist.sim_join(left, right, "k", comm, compress=compress)
+            runs[mode] = {
+                "bytes_on_wire": comm.bytes_on_wire,
+                "raw_bytes_on_wire": comm.raw_bytes_on_wire,
+                "comm_time_s": comm.comm_time_s,
+                "rows_joined": sum(int(t.count) for t in res),
+            }
+            results[mode] = _join_multiset(res)
+        keys_exact = [r[:2] for r in results["raw"]] == [r[:2] for r in results["compressed"]]
+        # block-int8 error is bounded by blockmax/254 <= global max / 254;
+        # allow one quantization step plus the report's rounding slack
+        wmax = max((abs(r[2]) for r in results["raw"]), default=0.0)
+        tol = wmax / 127.0 + 2e-3
+        values_close = all(
+            abs(a[2] - b[2]) <= tol
+            for a, b in zip(results["raw"], results["compressed"])
+        )
+        ratio = runs["raw"]["bytes_on_wire"] / max(runs["compressed"]["bytes_on_wire"], 1)
+        # paper-scale modeled wire time: weak-scaling payload, measured ratio
+        per_rank_raw = WEAK_ROWS * 2 * 16
+        per_rank_comp = int(per_rank_raw / ratio)
+        model_raw = ITERS * netsim.collective_time(
+            netsim.LAMBDA_DIRECT, "alltoallv", w, per_rank_raw
+        )
+        model_comp = ITERS * netsim.collective_time(
+            netsim.LAMBDA_DIRECT, "alltoallv", w, per_rank_comp
+        )
+        out["worlds"][str(w)] = {
+            **{f"{m}_{k}": v for m, r in runs.items() for k, v in r.items()},
+            "join_keys_exact": keys_exact,
+            "join_values_within_tolerance": values_close,
+            "wire_ratio": ratio,
+            "modeled_weak_alltoallv_s_raw": model_raw,
+            "modeled_weak_alltoallv_s_compressed": model_comp,
+        }
+    out["min_wire_ratio"] = min(c["wire_ratio"] for c in out["worlds"].values())
+    out["all_results_match"] = all(
+        c["join_keys_exact"] and c["join_values_within_tolerance"]
+        for c in out["worlds"].values()
+    )
+    return out
+
+
+def write_compression_report(path: Path | str = REPORT_PATH) -> dict:
+    """Emit the bench-smoke artifact; raises if compression regressed."""
+    rep = shuffle_compression_report()
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rep, indent=1) + "\n")
+    if not rep["all_results_match"]:
+        raise SystemExit("compressed join result diverged from raw join")
+    if rep["min_wire_ratio"] < 1.5:
+        raise SystemExit(
+            f"compressed shuffle ratio {rep['min_wire_ratio']:.2f}x < required 1.5x"
+        )
+    return rep
+
+
 def main(report=print) -> list[tuple]:
     res = run()
     rows = [(
@@ -176,10 +298,37 @@ def main(report=print) -> list[tuple]:
             f"model EC2 {res['speedup']['ec2-15gb-4vcpu'][i]:.2f}x/Lambda "
             f"{res['speedup']['lambda-10gb'][i]:.2f}x (paper {pe}x/{pl}x)",
         ))
+    # reuse the bench-smoke artifact when present (CI writes it in the
+    # preceding step; the committed copy matches the committed code)
+    comp = (
+        json.loads(REPORT_PATH.read_text())
+        if REPORT_PATH.exists()
+        else shuffle_compression_report()
+    )
+    for w, cell in comp["worlds"].items():
+        rows.append((
+            f"join_shuffle_compression/w{w}",
+            cell["compressed_comm_time_s"] * 1e6,
+            f"{cell['wire_ratio']:.2f}x fewer wire bytes "
+            f"({cell['raw_bytes_on_wire']}→{cell['compressed_bytes_on_wire']}); "
+            f"modeled weak alltoallv {cell['modeled_weak_alltoallv_s_raw']:.1f}s→"
+            f"{cell['modeled_weak_alltoallv_s_compressed']:.1f}s",
+        ))
     for r in rows:
         report(f"{r[0]},{r[1]:.1f},{r[2]}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    if "--compression-report" in sys.argv:
+        i = sys.argv.index("--compression-report")
+        dest = sys.argv[i + 1] if len(sys.argv) > i + 1 else REPORT_PATH
+        rep = write_compression_report(dest)
+        print(
+            "[bench] shuffle compression: min ratio "
+            f"{rep['min_wire_ratio']:.2f}x across P={list(rep['worlds'])} -> {dest}"
+        )
+    else:
+        main()

@@ -12,7 +12,6 @@ import argparse
 import tempfile
 
 from repro import configs
-from repro.data import pipeline
 from repro.launch.train import build_dataset, train
 
 

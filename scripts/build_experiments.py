@@ -72,7 +72,7 @@ def dryrun_table(recs, mesh: str) -> str:
     ok = [d for d in recs if d["status"] == "ok"]
     sk = [d for d in recs if d["status"] == "skipped"]
     hdr = (f"**Mesh {mesh}**: {len(ok)} cells compiled OK, {len(sk)} documented "
-           f"skips, 0 errors.\n\n")
+           "skips, 0 errors.\n\n")
     t = ("| arch | shape | compile (s) | mem/dev (GiB) | collectives "
          "(count: ag/ar/rs/a2a/cp) | wire GB/dev |\n|---|---|---|---|---|---|\n")
     rows = []

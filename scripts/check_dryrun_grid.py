@@ -1,0 +1,75 @@
+"""Compare a freshly generated dry-run grid against the committed baseline.
+
+The nightly CI job regenerates every ``experiments/dryrun/*.json`` cell on a
+clean tree and then runs this checker: any config whose committed status was
+``"ok"`` but now errors (or vanished) is a sharding/dryrun regression and
+fails the job.  Newly-skipped cells are reported but tolerated (shape support
+is config-driven); newly-*passing* cells are celebrated.
+
+Usage:
+    python scripts/check_dryrun_grid.py --baseline <saved-dir> --fresh experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_statuses(d: Path) -> dict[str, str]:
+    out = {}
+    for p in sorted(d.glob("*.json")):
+        try:
+            out[p.stem] = json.loads(p.read_text()).get("status", "missing-status")
+        except (json.JSONDecodeError, OSError) as e:
+            out[p.stem] = f"unreadable ({e})"
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True, type=Path,
+                    help="directory of committed dryrun artifacts")
+    ap.add_argument("--fresh", required=True, type=Path,
+                    help="directory of just-regenerated artifacts")
+    args = ap.parse_args()
+
+    base = load_statuses(args.baseline)
+    fresh = load_statuses(args.fresh)
+    if not base:
+        print(f"[check_dryrun_grid] no baseline artifacts in {args.baseline}")
+        return 2
+
+    regressions: list[str] = []
+    warnings: list[str] = []
+    improvements: list[str] = []
+    for tag, old in sorted(base.items()):
+        new = fresh.get(tag, "missing")
+        if old == "ok" and new != "ok":
+            regressions.append(f"  {tag}: ok -> {new}")
+        elif old != "ok" and new == "ok":
+            improvements.append(f"  {tag}: {old} -> ok")
+        elif old != new:
+            warnings.append(f"  {tag}: {old} -> {new}")
+    for tag in sorted(set(fresh) - set(base)):
+        warnings.append(f"  {tag}: (new cell) {fresh[tag]}")
+
+    ok_base = sum(1 for s in base.values() if s == "ok")
+    ok_fresh = sum(1 for s in fresh.values() if s == "ok")
+    print(f"[check_dryrun_grid] baseline: {ok_base}/{len(base)} ok | "
+          f"fresh: {ok_fresh}/{len(fresh)} ok")
+    for title, lines in (("improvements", improvements), ("changes", warnings),
+                         ("REGRESSIONS (ok -> error/missing)", regressions)):
+        if lines:
+            print(f"[check_dryrun_grid] {title}:")
+            print("\n".join(lines))
+    if regressions:
+        return 1
+    print("[check_dryrun_grid] no ok->error regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

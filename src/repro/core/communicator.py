@@ -20,6 +20,12 @@ Two execution surfaces:
 The paper's FMI extensions are reproduced as API surface: variable-length
 collectives (allgatherv / alltoallv), non-blocking ops with handles, retries
 with a ping capability, and atomic-counter rank assignment (``core/nat.py``).
+
+Compressed wire: :meth:`Communicator.compressed_alltoallv` carries
+pre-encoded blocks (see ``repro.dist.compression``), pricing each event at
+the post-codec byte count while logging the logical payload in
+``CommEvent.raw_bytes`` — so the §IV time/cost model sees the real wire and
+the compression ratio stays observable per event.
 """
 
 from __future__ import annotations
@@ -49,16 +55,35 @@ class CollectiveKind(str, enum.Enum):
 
 @dataclasses.dataclass
 class CommEvent:
-    """One priced communication event (the unit of the §IV time/cost model)."""
+    """One priced communication event (the unit of the §IV time/cost model).
+
+    ``bytes_per_rank`` is what actually crossed the wire (post-codec for a
+    compressed collective); ``raw_bytes`` is the logical payload before
+    compression, defaulting to the wire bytes for uncompressed events, so
+    ``raw_bytes / bytes_per_rank`` is the per-event compression ratio.
+    """
 
     kind: CollectiveKind
     world: int
     bytes_per_rank: int     # payload owned by one rank entering the collective
     time_s: float           # modeled wall time under this backend's channel
+    raw_bytes: int | None = None  # pre-codec payload per rank; None => wire
+
+    def __post_init__(self):
+        if self.raw_bytes is None:
+            self.raw_bytes = self.bytes_per_rank
 
     @property
     def total_bytes(self) -> int:
         return self.bytes_per_rank * self.world
+
+    @property
+    def total_raw_bytes(self) -> int:
+        return self.raw_bytes * self.world
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.raw_bytes / max(self.bytes_per_rank, 1)
 
 
 def _nbytes(x: np.ndarray) -> int:
@@ -88,11 +113,19 @@ class Communicator:
 
     # -- accounting ---------------------------------------------------------
 
-    def _record(self, kind: CollectiveKind, bytes_per_rank: int) -> CommEvent:
+    def _record(
+        self,
+        kind: CollectiveKind,
+        bytes_per_rank: int,
+        raw_bytes: int | None = None,
+    ) -> CommEvent:
         t = netsim.collective_time(
             self.channel, kind.value, self.world_size, bytes_per_rank
         )
-        ev = CommEvent(kind, self.world_size, int(bytes_per_rank), t)
+        ev = CommEvent(
+            kind, self.world_size, int(bytes_per_rank), t,
+            raw_bytes=None if raw_bytes is None else int(raw_bytes),
+        )
         self.events.append(ev)
         return ev
 
@@ -104,6 +137,13 @@ class Communicator:
     def bytes_on_wire(self) -> int:
         mult = 2 if self.channel.staged else 1
         return mult * int(sum(e.total_bytes for e in self.events))
+
+    @property
+    def raw_bytes_on_wire(self) -> int:
+        """Logical (pre-codec) bytes for the same event log — what an
+        uncompressed run would have shipped."""
+        mult = 2 if self.channel.staged else 1
+        return mult * int(sum(e.total_raw_bytes for e in self.events))
 
     def reset_events(self) -> None:
         self.events.clear()
@@ -196,6 +236,37 @@ class Communicator:
             for dst in range(self.world_size)
         ]
         return recvs, counts
+
+    def compressed_alltoallv(
+        self, sends: Sequence[Sequence[Any]]
+    ) -> list[list[Any]]:
+        """Variable-length all-to-all over *pre-encoded* payload blocks.
+
+        ``sends[src][dst]`` is an opaque encoded block exposing
+        ``wire_nbytes`` (what the codec ships) and ``raw_nbytes`` (what the
+        uncompressed path would have shipped) — e.g.
+        :class:`repro.dist.compression.EncodedBlock`.  The event is priced at
+        the **compressed** bytes-per-rank, so ``comm_time_s``/
+        ``bytes_on_wire`` and the BSP/cost-model pricing reflect the real
+        wire, while ``raw_bytes`` keeps the compression ratio observable.
+
+        Returns ``recvs[dst][src]`` (blocks pass through undecoded; the
+        caller owns the codec).
+        """
+        self._check_world(sends)
+        for row in sends:
+            if len(row) != self.world_size:
+                raise ValueError("alltoallv needs a full P x P send matrix")
+        # phase 1: exchange per-pair sizes (one int per destination)
+        self._record(CollectiveKind.ALLTOALL, self.world_size * 8)
+        # phase 2: payload, priced at the compressed wire size
+        wire = max(sum(int(b.wire_nbytes) for b in row) for row in sends)
+        raw = max(sum(int(b.raw_nbytes) for b in row) for row in sends)
+        self._record(CollectiveKind.ALLTOALLV, wire, raw_bytes=raw)
+        return [
+            [sends[src][dst] for src in range(self.world_size)]
+            for dst in range(self.world_size)
+        ]
 
     def bcast(self, x: np.ndarray, root: int = 0) -> list[np.ndarray]:
         self._check_rank(root)

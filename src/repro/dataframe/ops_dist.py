@@ -14,6 +14,17 @@ Two surfaces, same algorithm:
 
 The GroupBy combiner optimization (paper §IV-C: local pre-aggregation shrinks
 50M rows to ~1e3 before the wire) is `combine=True`.
+
+Compressed wire (`compress=True` on shuffle/join/groupby, both surfaces):
+the shuffle is the communication-bound exchange (paper §IV), so each
+(src, dst) block goes through the columnar codec in
+``repro.dist.compression`` before the alltoallv.  Key columns are encoded
+**exactly** (dictionary / narrow-width offsets / raw — never quantized), so
+``hash(key) % P`` routing and join equality see bit-identical values;
+float value columns ship as block-int8 with one f32 scale per block
+(error bounded per block); integer value columns take the exact treatment,
+keeping integer aggregates exact.  The communicator prices the event at the
+compressed bytes and records the logical bytes in ``CommEvent.raw_bytes``.
 """
 
 from __future__ import annotations
@@ -27,6 +38,7 @@ from repro.core.communicator import Communicator
 from repro.dataframe import ops_local
 from repro.dataframe.partition import build_partition_payload
 from repro.dataframe.table import Table, from_stacked
+from repro.dist import compression
 
 
 # ---------------------------------------------------------------------------
@@ -34,12 +46,24 @@ from repro.dataframe.table import Table, from_stacked
 # ---------------------------------------------------------------------------
 
 
-def _shuffle_sim(tables: list[Table], key: str, comm: Communicator) -> list[Table]:
-    """Hash-shuffle each rank's table so rows land at hash(key) % P."""
+def _shuffle_sim(
+    tables: list[Table], key: str, comm: Communicator, compress: bool = False
+) -> list[Table]:
+    """Hash-shuffle each rank's table so rows land at hash(key) % P.
+
+    ``compress=False`` ships every block as one float64 row-matrix (the
+    historical wire format, 8 B/value) — note this silently loses integer
+    precision above 2**53, so raw-path keys must stay within float64's
+    exact-integer range.  ``compress=True`` runs each block through the
+    columnar codec instead: the key column bit-exact at any magnitude,
+    float value columns block-int8, integer value columns exact — and the
+    communicator prices the compressed bytes while logging the raw ones.
+    """
     p = comm.world_size
+    names = sorted(tables[0].columns)
+    if compress:
+        return _shuffle_sim_compressed(tables, key, comm, names)
     sends: list[list[np.ndarray]] = []
-    schemas = [sorted(t.columns) for t in tables]
-    names = schemas[0]
     for t in tables:
         payload, counts = build_partition_payload(t, p, [key])
         row_mats = []
@@ -64,12 +88,42 @@ def _shuffle_sim(tables: list[Table], key: str, comm: Communicator) -> list[Tabl
     return out
 
 
+def _shuffle_sim_compressed(
+    tables: list[Table], key: str, comm: Communicator, names: list[str]
+) -> list[Table]:
+    """Codec-per-block variant of :func:`_shuffle_sim` (same row routing)."""
+    p = comm.world_size
+    dtypes = {n: np.asarray(tables[0].columns[n]).dtype for n in names}
+    sends: list[list[compression.EncodedBlock]] = []
+    for t in tables:
+        payload, counts = build_partition_payload(t, p, [key])
+        row = []
+        for d in range(p):
+            c = int(counts[d])
+            cols = {n: np.asarray(payload[n][d][:c]) for n in names}
+            row.append(compression.encode_block(cols, {key}))
+        sends.append(row)
+    recvs = comm.compressed_alltoallv(sends)
+    out: list[Table] = []
+    for dst in range(p):
+        decoded = [compression.decode_block(b) for b in recvs[dst]]
+        data = {
+            n: np.concatenate([d[n] for d in decoded]).astype(dtypes[n])
+            for n in names
+        }
+        nrows = data[names[0]].shape[0] if names else 0
+        cap = max(1, sum(t.capacity for t in tables) // p * 2)
+        out.append(Table.from_dict(data, capacity=max(cap, nrows)))
+    return out
+
+
 def sim_join(
-    left: list[Table], right: list[Table], key: str, comm: Communicator
+    left: list[Table], right: list[Table], key: str, comm: Communicator,
+    compress: bool = False,
 ) -> list[Table]:
     """Distributed inner join (unique right keys) over the communicator."""
-    l_sh = _shuffle_sim(left, key, comm)
-    r_sh = _shuffle_sim(right, key, comm)
+    l_sh = _shuffle_sim(left, key, comm, compress=compress)
+    r_sh = _shuffle_sim(right, key, comm, compress=compress)
     comm.barrier()
     return [ops_local.join_unique(l, r, key) for l, r in zip(l_sh, r_sh)]
 
@@ -80,6 +134,7 @@ def sim_groupby(
     aggs: dict[str, str],
     comm: Communicator,
     combine: bool = True,
+    compress: bool = False,
 ) -> list[Table]:
     """Distributed groupby; `combine` applies local pre-aggregation first."""
     work = tables
@@ -88,7 +143,7 @@ def sim_groupby(
         work = [_rename_back(ops_local.groupby_agg(t, key, aggs), aggs) for t in tables]
         # re-aggregating partials: sum-of-sums, max-of-maxes, sum-of-counts
         final_aggs = {c: ("sum" if op == "count" else op) for c, op in aggs.items()}
-    shuffled = _shuffle_sim(work, key, comm)
+    shuffled = _shuffle_sim(work, key, comm, compress=compress)
     comm.barrier()
     out = [ops_local.groupby_agg(t, key, final_aggs) for t in shuffled]
     if combine:
@@ -121,36 +176,52 @@ def _restore_names(t: Table, aggs: dict[str, str], final_aggs: dict[str, str]) -
 # ---------------------------------------------------------------------------
 
 
-def shuffle_spmd(table: Table, key: str, axis: str) -> Table:
+def shuffle_spmd(table: Table, key: str, axis: str, compress: bool = False) -> Table:
     """Hash-shuffle a per-shard table across mesh axis `axis`.
 
     Fixed-capacity alltoallv: send buffer is [P, cap_dest, ...] per shard.
     cap_dest = local capacity (worst-case skew absorbed by the receive pack).
+
+    ``compress=True`` replaces each float *value* column's buffer with a
+    block-int8 payload + per-block f32 scales across the alltoall (the key
+    column and integer columns always ship exact — routing and join
+    equality depend on them).
     """
     p = jax.lax.axis_size(axis)
     payload, counts = build_partition_payload(table, p, [key])
     recv_counts = direct.alltoallv_counts(counts, axis)
     recv_payload = {}
     for name, buf in payload.items():
-        recv_payload[name] = direct.alltoall(buf, axis, split_dim=0, concat_dim=0)
+        if compress and name != key and jnp.issubdtype(buf.dtype, jnp.floating):
+            q, scales = compression.quantize_slots(buf)
+            q_r = direct.alltoall(q, axis, split_dim=0, concat_dim=0)
+            s_r = direct.alltoall(scales, axis, split_dim=0, concat_dim=0)
+            recv_payload[name] = compression.dequantize_slots(
+                q_r, s_r, buf.shape, buf.dtype
+            )
+        else:
+            recv_payload[name] = direct.alltoall(buf, axis, split_dim=0, concat_dim=0)
     return from_stacked(recv_payload, recv_counts)
 
 
-def join_spmd(left: Table, right: Table, key: str, axis: str) -> Table:
-    l = shuffle_spmd(left, key, axis)
-    r = shuffle_spmd(right, key, axis)
-    return ops_local.join_unique(l, r, key)
+def join_spmd(
+    left: Table, right: Table, key: str, axis: str, compress: bool = False
+) -> Table:
+    l_sh = shuffle_spmd(left, key, axis, compress=compress)
+    r_sh = shuffle_spmd(right, key, axis, compress=compress)
+    return ops_local.join_unique(l_sh, r_sh, key)
 
 
 def groupby_spmd(
-    table: Table, key: str, aggs: dict[str, str], axis: str, combine: bool = True
+    table: Table, key: str, aggs: dict[str, str], axis: str,
+    combine: bool = True, compress: bool = False,
 ) -> Table:
     work = table
     final_aggs = dict(aggs)
     if combine:
         work = _rename_back(ops_local.groupby_agg(table, key, aggs), aggs)
         final_aggs = {c: ("sum" if op == "count" else op) for c, op in aggs.items()}
-    shuffled = shuffle_spmd(work, key, axis)
+    shuffled = shuffle_spmd(work, key, axis, compress=compress)
     out = ops_local.groupby_agg(shuffled, key, final_aggs)
     if combine:
         out = _restore_names(out, aggs, final_aggs)

@@ -1,4 +1,4 @@
-"""Int8 gradient compression with error feedback (EF-SGD).
+"""Wire compression: int8 gradient compression (EF-SGD) + columnar shuffle codec.
 
 At pod scale the gradient all-reduce is bandwidth-bound (paper §IV–V:
 communication, not compute, dominates), so the dp-axis reduction trades
@@ -11,12 +11,38 @@ exact-SGD convergence rates.
 ``compressed_pmean`` runs *inside* ``shard_map``: every shard all-gathers
 only the int8 payload + scales, then dequantizes and averages identically,
 so all shards compute a bitwise-identical mean without a trusted root.
+
+Columnar wire codec (the shuffle path)
+--------------------------------------
+The alltoallv shuffle in ``dataframe/ops_dist.py`` is the other
+communication-bound exchange (paper §IV: the distributed join's scaling
+curve is set by the shuffle, not the local join).  Its wire format is
+per-column, with eligibility decided by *role*:
+
+- **Key columns** must round-trip bit-exact — ``hash(key) % P`` routing and
+  join equality depend on the decoded value — so integer keys get an exact
+  encoding: *dictionary* (codes into a unique-value table) or *narrow*
+  (offsets from the column min in the smallest uint width that spans the
+  range; the fixed-width cousin of a varint), whichever is smaller, with
+  raw passthrough as the floor.  Non-integer keys are never quantized.
+- **Value columns** may trade precision for bytes: floats ship as block-int8
+  with one f32 scale per ``_BLOCK`` values (per-block max error
+  ``blockmax/254``, same construction as the gradient path); integer values
+  take the exact key treatment so aggregates over them stay exact.
+
+``EncodedColumn.wire_nbytes`` is what the codec actually ships;
+``raw_nbytes`` is what the uncompressed simulation path would have shipped
+(it stacks every column into one float64 row-matrix), so
+``raw_nbytes / wire_nbytes`` is the observable per-column compression ratio.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Any
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -99,3 +125,208 @@ def wire_bytes_saved(tree: Any) -> dict:
         "ratio_vs_bf16": bf16_bytes / max(compressed, 1),
         "block": _BLOCK,
     }
+
+
+# ---------------------------------------------------------------------------
+# SPMD shuffle compression (jnp; inside shard_map, feeds lax.all_to_all)
+# ---------------------------------------------------------------------------
+
+
+def quantize_slots(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Block-int8 quantize an alltoallv send buffer ``[P, cap, ...]``.
+
+    Each destination slot's rows are flattened and quantized in ``_BLOCK``
+    blocks (zero-padded to a multiple); returns ``(q [P, n], scales
+    [P, n/_BLOCK])`` — the two fixed-shape payloads that replace the float
+    buffer on the wire.
+    """
+    p = x.shape[0]
+    flat = x.astype(jnp.float32).reshape(p, -1)
+    pad = (-flat.shape[1]) % _BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((p, pad), jnp.float32)], axis=1)
+    blocks = flat.reshape(p, -1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale[..., None], 1e-30)), -127, 127)
+    return q.astype(jnp.int8).reshape(p, -1), scale.astype(jnp.float32)
+
+
+def dequantize_slots(
+    q: jax.Array, scale: jax.Array, shape: tuple[int, ...], dtype
+) -> jax.Array:
+    """Invert :func:`quantize_slots` back to ``shape`` (trims the pad)."""
+    p = q.shape[0]
+    deq = q.astype(jnp.float32).reshape(p, -1, _BLOCK) * scale[..., None]
+    n = math.prod(shape[1:]) if len(shape) > 1 else 1
+    return deq.reshape(p, -1)[:, :n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Columnar wire codec (numpy; the simulation-surface shuffle payload)
+# ---------------------------------------------------------------------------
+
+# The raw sim shuffle stacks every column into a float64 row-matrix, so the
+# uncompressed wire cost is 8 bytes per value regardless of column dtype.
+_RAW_ITEMSIZE = 8
+
+_NARROW_WIDTHS = (np.uint8, np.uint16, np.uint32, np.uint64)
+
+
+@dataclasses.dataclass
+class EncodedColumn:
+    """One column of one shuffle block, ready for the wire.
+
+    ``kind`` is the chosen encoding:
+
+    - ``"dict"``   : ``parts = {codes, uniques}`` — exact (integer columns)
+    - ``"narrow"`` : ``parts = {offsets}`` + ``origin`` — exact (integer)
+    - ``"raw"``    : ``parts = {values}`` — exact passthrough (any dtype)
+    - ``"int8"``   : ``parts = {q, scales}`` — lossy block-int8 (float values)
+    """
+
+    kind: str
+    dtype: np.dtype          # dtype the decoder must restore
+    count: int               # valid rows in this block
+    parts: dict[str, np.ndarray]
+    origin: int = 0          # narrow encoding: column min (decoded offset base)
+
+    @property
+    def wire_nbytes(self) -> int:
+        meta = 8 if self.kind == "narrow" else 0  # origin travels as int64
+        return int(sum(a.nbytes for a in self.parts.values())) + meta
+
+    @property
+    def raw_nbytes(self) -> int:
+        return self.count * _RAW_ITEMSIZE
+
+
+def _narrow_dtype(spread: int) -> np.dtype | None:
+    for w in _NARROW_WIDTHS:
+        if spread <= np.iinfo(w).max:
+            return np.dtype(w)
+    return None
+
+
+def _encode_int_exact(arr: np.ndarray) -> EncodedColumn:
+    """Smallest of dictionary / narrow / raw; all three round-trip bit-exact."""
+    n = arr.shape[0]
+    if n == 0:
+        return EncodedColumn("raw", arr.dtype, 0, {"values": arr})
+    lo, hi = int(arr.min()), int(arr.max())
+    candidates: list[EncodedColumn] = [
+        EncodedColumn("raw", arr.dtype, n, {"values": arr})
+    ]
+    ndt = _narrow_dtype(hi - lo)
+    if ndt is not None and ndt.itemsize < arr.dtype.itemsize:
+        # Subtract in the column's own width, modular (two's complement):
+        # 0 <= value - lo <= spread < 2^width, so the wrapped difference is
+        # the true offset even at the extremes of int64.
+        u = np.dtype(f"u{arr.dtype.itemsize}")
+        base = np.asarray(lo, arr.dtype).reshape(1).view(u)
+        offsets = (arr.view(u) - base).astype(ndt)
+        candidates.append(
+            EncodedColumn("narrow", arr.dtype, n, {"offsets": offsets}, origin=lo)
+        )
+    uniques, codes = np.unique(arr, return_inverse=True)
+    cdt = _narrow_dtype(max(len(uniques) - 1, 0))
+    if cdt is not None:
+        candidates.append(
+            EncodedColumn(
+                "dict", arr.dtype, n,
+                {"codes": codes.astype(cdt), "uniques": uniques},
+            )
+        )
+    return min(candidates, key=lambda e: e.wire_nbytes)
+
+
+def _quantize_blocks_np(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy mirror of :func:`_quantize_blocks` (pads to a block multiple)."""
+    flat = np.asarray(x, np.float32).reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    flat = flat.reshape(-1, _BLOCK)
+    scale = np.abs(flat).max(axis=-1) / 127.0
+    q = np.round(flat / np.maximum(scale[:, None], 1e-30))
+    return np.clip(q, -127, 127).astype(np.int8), scale.astype(np.float32)
+
+
+def _dequantize_blocks_np(q: np.ndarray, scale: np.ndarray, n: int) -> np.ndarray:
+    flat = q.astype(np.float32).reshape(-1, _BLOCK) * scale[:, None]
+    return flat.reshape(-1)[:n]
+
+
+def encode_column(arr: np.ndarray, *, exact: bool) -> EncodedColumn:
+    """Encode one 1-D column for the shuffle wire.
+
+    ``exact=True`` (key columns, and integer value columns) picks a bit-exact
+    encoding; ``exact=False`` on a float column ships block-int8 + scales.
+    """
+    arr = np.ascontiguousarray(arr)  # .view() below needs contiguous storage
+    if arr.ndim != 1:
+        raise ValueError(f"codec expects 1-D columns, got shape {arr.shape}")
+    if np.issubdtype(arr.dtype, np.integer):
+        return _encode_int_exact(arr)
+    if exact or not np.issubdtype(arr.dtype, np.floating):
+        return EncodedColumn("raw", arr.dtype, arr.shape[0], {"values": arr})
+    q, scales = _quantize_blocks_np(arr)
+    # ship only the valid int8 values; decode re-pads to the block multiple
+    return EncodedColumn(
+        "int8", arr.dtype, arr.shape[0],
+        {"q": q.reshape(-1)[: arr.shape[0]], "scales": scales},
+    )
+
+
+def decode_column(enc: EncodedColumn) -> np.ndarray:
+    if enc.kind == "raw":
+        return np.asarray(enc.parts["values"], enc.dtype)
+    if enc.kind == "narrow":
+        u = np.dtype(f"u{enc.dtype.itemsize}")
+        base = np.asarray(enc.origin, enc.dtype).reshape(1).view(u)
+        return (enc.parts["offsets"].astype(u) + base).view(enc.dtype)
+    if enc.kind == "dict":
+        return enc.parts["uniques"][enc.parts["codes"]].astype(enc.dtype)
+    if enc.kind == "int8":
+        q = enc.parts["q"]
+        pad = (-q.shape[0]) % _BLOCK
+        if pad:
+            q = np.concatenate([q, np.zeros(pad, np.int8)])
+        return _dequantize_blocks_np(q, enc.parts["scales"], enc.count).astype(enc.dtype)
+    raise ValueError(f"unknown encoding kind {enc.kind!r}")
+
+
+@dataclasses.dataclass
+class EncodedBlock:
+    """One (src, dst) cell of a compressed alltoallv: all columns of a block."""
+
+    columns: dict[str, EncodedColumn]
+    count: int
+
+    @property
+    def wire_nbytes(self) -> int:
+        return sum(c.wire_nbytes for c in self.columns.values())
+
+    @property
+    def raw_nbytes(self) -> int:
+        return sum(c.raw_nbytes for c in self.columns.values())
+
+
+def encode_block(
+    columns: dict[str, np.ndarray], key_cols: set[str] | frozenset[str]
+) -> EncodedBlock:
+    """Encode a dict of equal-length columns; ``key_cols`` are exact-only."""
+    counts = {a.shape[0] for a in columns.values()}
+    if len(counts) > 1:
+        raise ValueError(f"ragged block: {counts}")
+    n = counts.pop() if counts else 0
+    return EncodedBlock(
+        {
+            name: encode_column(arr, exact=name in key_cols)
+            for name, arr in columns.items()
+        },
+        n,
+    )
+
+
+def decode_block(block: EncodedBlock) -> dict[str, np.ndarray]:
+    return {name: decode_column(enc) for name, enc in block.columns.items()}

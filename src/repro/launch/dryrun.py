@@ -27,7 +27,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch import hlo_analysis, shapes

@@ -25,7 +25,6 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 PEAK_FLOPS = 197e12          # bf16 per chip

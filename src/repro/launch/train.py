@@ -17,7 +17,6 @@ import argparse
 import time
 from pathlib import Path
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -9,9 +9,6 @@ with an explicit shard_map ring for dp-dominant configs.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import CollectiveKind, Communicator, make_communicator, nat, netsim
+from repro.core import CollectiveKind, make_communicator, nat, netsim
 from repro.core import cost_model as cm
 
 
@@ -63,6 +63,55 @@ class TestCollectiveSemantics:
         assert kinds == [CollectiveKind.BARRIER, CollectiveKind.ALLREDUCE]
         assert self.c.comm_time_s > 0
         assert self.c.bytes_on_wire == 4 * 1024 * 8
+
+    def test_raw_bytes_defaults_to_wire_bytes(self):
+        """Uncompressed events: raw_bytes == bytes_per_rank (back-compat)."""
+        self.c.reset_events()
+        self.c.allreduce([np.ones(256)] * 4)
+        (ev,) = self.c.events
+        assert ev.raw_bytes == ev.bytes_per_rank == 256 * 8
+        assert ev.compression_ratio == 1.0
+        assert self.c.raw_bytes_on_wire == self.c.bytes_on_wire
+
+    def test_compressed_alltoallv_accounting(self):
+        """The event prices compressed bytes; raw_bytes keeps the logical
+        payload observable (the ISSUE's compression-ratio requirement)."""
+        from repro.dist import compression
+
+        self.c.reset_events()
+        rng = np.random.default_rng(0)
+        sends = [
+            [
+                compression.encode_block(
+                    {"k": np.arange(32, dtype=np.int32) + 100 * s + d,
+                     "v": rng.normal(size=32).astype(np.float64)},
+                    {"k"},
+                )
+                for d in range(4)
+            ]
+            for s in range(4)
+        ]
+        recvs = self.c.compressed_alltoallv(sends)
+        # transposition: recvs[dst][src] is sends[src][dst]
+        for d in range(4):
+            for s in range(4):
+                assert recvs[d][s] is sends[s][d]
+        counts_ev, payload_ev = self.c.events
+        assert counts_ev.kind == CollectiveKind.ALLTOALL
+        assert payload_ev.kind == CollectiveKind.ALLTOALLV
+        exp_wire = max(sum(b.wire_nbytes for b in row) for row in sends)
+        exp_raw = max(sum(b.raw_nbytes for b in row) for row in sends)
+        assert payload_ev.bytes_per_rank == exp_wire
+        assert payload_ev.raw_bytes == exp_raw
+        assert payload_ev.compression_ratio > 1.5
+        assert self.c.bytes_on_wire < self.c.raw_bytes_on_wire
+
+    def test_compressed_alltoallv_requires_square(self):
+        from repro.dist import compression
+
+        blk = compression.encode_block({"k": np.arange(4, dtype=np.int32)}, {"k"})
+        with pytest.raises(ValueError):
+            self.c.compressed_alltoallv([[blk] * 3] * 4)
 
 
 class TestPaperCalibration:

@@ -118,6 +118,86 @@ class TestCompressionMath:
         assert rep["ratio_vs_bf16"] > 1.9
 
 
+class TestShuffleCodec:
+    """Columnar wire codec invariants (the compressed alltoallv payload)."""
+
+    @given(
+        st.lists(st.integers(-(2**62), 2**62), min_size=0, max_size=300),
+        st.integers(0, 2),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_key_columns_round_trip_bit_exact(self, vals, dt_idx):
+        """Exact encodings only for keys: hash routing / join equality safe."""
+        dt = (np.int64, np.int32, np.int16)[dt_idx]
+        arr = np.asarray(vals, np.int64).astype(dt)  # wrap into range, any dist
+        enc = compression.encode_column(arr, exact=True)
+        assert enc.kind in ("raw", "narrow", "dict")  # never quantized
+        back = compression.decode_column(enc)
+        assert back.dtype == arr.dtype
+        np.testing.assert_array_equal(back, arr)
+        assert enc.wire_nbytes <= arr.nbytes + 8  # never worse than raw(+meta)
+
+    def test_key_extremes_round_trip(self):
+        for dt in (np.int8, np.int32, np.int64, np.uint32, np.uint64):
+            info = np.iinfo(dt)
+            arr = np.asarray([info.min, info.max, info.min, info.max + 0], dt)
+            back = compression.decode_column(compression.encode_column(arr, exact=True))
+            np.testing.assert_array_equal(back, arr)
+
+    def test_encoding_choice(self):
+        # narrow beats raw on a small-range wide column
+        small_range = np.arange(1000, dtype=np.int64) + 10**12
+        assert compression.encode_column(small_range, exact=True).kind == "narrow"
+        # dictionary beats narrow when uniques are few but spread out
+        few_unique = (np.arange(4000, dtype=np.int64) % 5) * 10**14
+        assert compression.encode_column(few_unique, exact=True).kind == "dict"
+        # both beat the float64 wire equivalent
+        for arr in (small_range, few_unique):
+            enc = compression.encode_column(arr, exact=True)
+            assert enc.wire_nbytes < enc.raw_nbytes / 1.5
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_float_value_error_bounded_by_block_scale(self, seed):
+        rng = np.random.default_rng(seed)
+        x = (rng.normal(size=513) * rng.uniform(0.01, 100)).astype(np.float64)
+        enc = compression.encode_column(x, exact=False)
+        assert enc.kind == "int8"
+        back = compression.decode_column(enc)
+        scales = enc.parts["scales"]
+        pad = (-len(x)) % compression._BLOCK
+        err = np.abs(np.concatenate([back - x, np.zeros(pad)]))
+        bound = np.repeat(scales, compression._BLOCK)[: len(err)] * 0.5 + 1e-9
+        assert (err <= bound * 1.01).all()
+        assert enc.wire_nbytes < x.nbytes / 4  # ~f64 -> ~1B + scales
+
+    def test_integer_value_columns_stay_exact(self):
+        arr = np.asarray([7, -3, 1 << 40, 0], np.int64)
+        enc = compression.encode_column(arr, exact=False)
+        assert enc.kind in ("raw", "narrow", "dict")
+        np.testing.assert_array_equal(compression.decode_column(enc), arr)
+
+    def test_block_round_trip_and_ragged_rejected(self):
+        cols = {
+            "k": np.arange(64, dtype=np.int32),
+            "v": np.linspace(-5, 5, 64).astype(np.float32),
+        }
+        blk = compression.encode_block(cols, {"k"})
+        out = compression.decode_block(blk)
+        np.testing.assert_array_equal(out["k"], cols["k"])
+        assert np.abs(out["v"] - cols["v"]).max() <= 5 / 127 + 1e-6
+        assert blk.wire_nbytes < blk.raw_nbytes
+        with pytest.raises(ValueError):
+            compression.encode_block(
+                {"a": np.zeros(3, np.int32), "b": np.zeros(4, np.int32)}, set()
+            )
+
+    def test_empty_column(self):
+        enc = compression.encode_column(np.array([], np.int32), exact=True)
+        assert enc.wire_nbytes == 0 and enc.raw_nbytes == 0
+        assert compression.decode_column(enc).shape == (0,)
+
+
 class TestShardingRules:
     def test_param_specs_cover_tree(self):
         import jax

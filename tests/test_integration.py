@@ -2,7 +2,6 @@
 benchmark harness sanity (deliverables (b)/(d) wired together)."""
 
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.core import make_communicator

@@ -2,13 +2,12 @@
 swept over shapes and dtypes (assignment deliverable (c))."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels.flash_attention import kernel as fa_kernel, ref as fa_ref, ops as fa_ops
 from repro.kernels.hash_partition import kernel as hp_kernel, ref as hp_ref
-from repro.kernels.segment_reduce import kernel as sr_kernel, ref as sr_ref, ops as sr_ops
+from repro.kernels.segment_reduce import ref as sr_ref, ops as sr_ops
 from repro.kernels.join_probe import kernel as jp_kernel, ref as jp_ref
 
 

@@ -9,7 +9,6 @@ import pytest
 
 from repro import configs
 from repro.models import api, rwkv
-from repro.models.config import ArchConfig
 
 
 def _batch_for(cfg, b=2, s=16, seed=0):
