@@ -1,0 +1,133 @@
+"""Checkpoint store benchmark: local vs S3-priced save/restore, full vs
+ranged (resharded) restore.
+
+The elastic-scaling scenarios on the roadmap all hinge on checkpoint traffic
+being affordable through an object store (paper §V: the architecture "lacks
+checkpointing and fault tolerance"; §IV prices every byte through a channel
+model).  This benchmark saves a reduced-config parameter tree through both
+backends and reports:
+
+- LocalStore: measured wall seconds (atomic dir-rename layout, no network),
+- S3Store: modeled seconds from the priced op log (netsim.S3_STAGED per-op
+  latency + bandwidth) plus S3 request cost in USD,
+- full restore vs ranged restore onto one shard of a model-parallel mesh
+  (``dist.checkpoint.restore_sharded`` with ``dist.sharding.param_specs``):
+  the ranged path must move strictly fewer bytes — CI asserts < 60%.
+
+Emits ``experiments/BENCH_ckpt_store.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.dist import checkpoint as ckpt
+from repro.dist import sharding
+from repro.dist.object_store import LocalStore, S3Store
+from repro.models import api
+
+ARCH = "minicpm-2b"
+MESH_SHAPE = (1, 4)          # model-parallel: the resharded-restore scenario
+MESH_AXES = ("data", "model")
+STEP = 100
+
+
+def run() -> dict:
+    cfg = configs.get(ARCH).reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    leaves = jax.tree.leaves(params)
+    total_bytes = int(sum(np.asarray(x).nbytes for x in leaves))
+
+    # -- LocalStore: measured wall time (disk, no network model) ------------
+    with tempfile.TemporaryDirectory() as tmp:
+        local = LocalStore(tmp)
+        t0 = time.perf_counter()
+        ref_local = ckpt.save(local, STEP, params)
+        local_save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ckpt.restore(ref_local, params)
+        local_restore_s = time.perf_counter() - t0
+
+    # -- S3Store: modeled time from the priced op log -----------------------
+    s3 = S3Store()
+    ref = ckpt.save(s3, STEP, params)
+    save_ops = {
+        "model_s": s3.op_time_s,
+        "puts": s3.puts,
+        "bytes": s3.bytes_put,
+        "cost_usd": s3.request_cost_usd(),
+    }
+
+    s3.reset_ops()
+    ckpt.restore(ref, params)
+    full_ops = {
+        "model_s": s3.op_time_s,
+        "gets": s3.gets,
+        "bytes": s3.bytes_got,
+        "cost_usd": s3.request_cost_usd(),
+    }
+
+    # -- ranged restore of one model-parallel shard -------------------------
+    mesh = jax.sharding.AbstractMesh(MESH_SHAPE, MESH_AXES)
+    specs = sharding.param_specs(cfg, params, mesh)
+    coords = {"data": 0, "model": 0}
+    s3.reset_ops()
+    shard = ckpt.restore_sharded(ref, params, specs, mesh, coords)
+    ranged_ops = {
+        "model_s": s3.op_time_s,
+        "gets": s3.gets,
+        "bytes": s3.bytes_got,
+        "cost_usd": s3.request_cost_usd(),
+    }
+    shard_bytes = int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(shard)))
+
+    return {
+        "arch": ARCH,
+        "mesh": dict(zip(MESH_AXES, MESH_SHAPE)),
+        "tree": {"leaves": len(leaves), "bytes": total_bytes},
+        "local": {"save_wall_s": local_save_s, "restore_wall_s": local_restore_s},
+        "s3": {"save": save_ops, "restore_full": full_ops, "restore_ranged": ranged_ops},
+        "ranged_fraction": ranged_ops["bytes"] / max(full_ops["bytes"], 1),
+        "shard_bytes": shard_bytes,
+    }
+
+
+def write_report(out: str | Path) -> dict:
+    res = run()
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=1))
+    frac = res["ranged_fraction"]
+    if frac >= 0.6:
+        raise SystemExit(
+            f"ranged restore moved {frac:.1%} of full-restore bytes (>= 60%)"
+        )
+    return res
+
+
+def main(report=print) -> None:
+    res = run()
+    mb = res["tree"]["bytes"] / 2**20
+    report(f"ckpt_store/tree_mb,,{mb:.1f}")
+    report(f"ckpt_store/local_save_s,,{res['local']['save_wall_s']:.3f}")
+    report(f"ckpt_store/s3_save_model_s,,{res['s3']['save']['model_s']:.3f}")
+    report(f"ckpt_store/s3_restore_full_model_s,,{res['s3']['restore_full']['model_s']:.3f}")
+    report(f"ckpt_store/s3_restore_ranged_model_s,,{res['s3']['restore_ranged']['model_s']:.3f}")
+    report(f"ckpt_store/ranged_fraction,,{res['ranged_fraction']:.3f}")
+    report(f"ckpt_store/s3_save_cost_usd,,{res['s3']['save']['cost_usd']:.6f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/BENCH_ckpt_store.json")
+    args = ap.parse_args()
+    res = write_report(args.out)
+    print(json.dumps(res, indent=1))

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   time_composition   Fig 14 (init/compute/comm breakdown)
   cost_analysis      Figs 15/16 ($0.17 NAT, $0.032 redis join, $3.25 campaign)
   roofline           §Roofline table from the dry-run artifacts
+  ckpt_store         checkpoint store: local vs s3-priced, full vs ranged restore
 """
 
 from __future__ import annotations
@@ -20,6 +21,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        ckpt_store,
         collectives_micro,
         comm_substrates,
         cost_analysis,
@@ -39,6 +41,7 @@ def main() -> None:
         ("time_composition", time_composition),
         ("cost_analysis", cost_analysis),
         ("roofline", roofline),
+        ("ckpt_store", ckpt_store),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -7,7 +7,10 @@ deadline (§V "the lack of checkpointing and fault tolerance mechanisms limits
 the ability to recover from failures or time-constrained execution
 boundaries").  This runtime implements the model *and* the missing pieces:
 
-- superstep checkpointing (state snapshot after each barrier),
+- superstep checkpointing (state snapshot after each barrier) through the
+  same durable-store path the trainer uses (``repro.dist.object_store``):
+  a local directory for single-host runs or a simulated S3 store whose
+  per-op pricing lands checkpoint cost in the §IV time/cost model,
 - restart/recovery from the last completed superstep,
 - worker-failure + straggler handling: a rank that exceeds its deadline is
   re-executed (serverless semantics: functions are idempotent re-invocable),
@@ -24,6 +27,7 @@ compute phases).
 from __future__ import annotations
 
 import dataclasses
+import json
 import pickle
 import time
 from pathlib import Path
@@ -31,6 +35,10 @@ from typing import Any, Callable, Sequence
 
 from repro.core import netsim
 from repro.core.communicator import Communicator
+
+# module reference only (attributes resolved at call time): repro.dist pulls
+# netsim back out of repro.core, so binding names here would be circular
+from repro.dist import object_store as _object_store
 
 # A superstep: (rank, state, comm, world) -> new state.  Communication MUST go
 # through `comm` so it is priced; local work is timed around the call.
@@ -74,7 +82,7 @@ class BSPRuntime:
         world_size: int,
         platform: netsim.PlatformModel = netsim.LAMBDA_10GB,
         channel_env: str | None = None,
-        checkpoint_dir: str | Path | None = None,
+        checkpoint_dir: str | Path | Any | None = None,
         deadline_s: float | None = None,
         cpu_scale: float = 1.0,
     ):
@@ -84,36 +92,58 @@ class BSPRuntime:
             netsim.CHANNELS[channel_env] if channel_env else platform.channel
         )
         self.comm = Communicator(self.world, channel)
-        self.checkpoint_dir = Path(checkpoint_dir) if checkpoint_dir else None
+        # checkpoint_dir: a directory (wrapped in a LocalStore) or any
+        # dist.object_store.Store — the same durable-state plane train.py uses
+        self.checkpoint_store = (
+            _object_store.as_store(checkpoint_dir) if checkpoint_dir is not None else None
+        )
         self.deadline_s = deadline_s
         self.cpu_scale = cpu_scale
         self._completed_steps = 0
 
     # -- checkpointing --------------------------------------------------------
-
-    def _ckpt_path(self, step: int) -> Path:
-        assert self.checkpoint_dir is not None
-        return self.checkpoint_dir / f"superstep_{step:05d}.pkl"
-
-    def _save(self, step: int, states: list[Any]) -> None:
-        if self.checkpoint_dir is None:
-            return
-        self.checkpoint_dir.mkdir(parents=True, exist_ok=True)
-        tmp = self._ckpt_path(step).with_suffix(".tmp")
-        with open(tmp, "wb") as f:
-            pickle.dump({"step": step, "world": self.world, "states": states}, f)
-        tmp.rename(self._ckpt_path(step))  # atomic publish
+    #
+    # One store group per superstep: ``superstep_<n>/states.pkl`` plus a
+    # ``manifest.json`` written last (the commit marker on put-then-marker
+    # stores).  A killed writer leaves only store garbage that the next
+    # publish/list sweeps — never a readable half-checkpoint.
 
     @staticmethod
-    def latest_checkpoint(checkpoint_dir: str | Path) -> dict | None:
-        d = Path(checkpoint_dir)
-        if not d.exists():
+    def _group_name(step: int) -> str:
+        return f"superstep_{step:05d}"
+
+    def _save(self, step: int, states: list[Any]) -> None:
+        if self.checkpoint_store is None:
+            return
+        payload = pickle.dumps(
+            {"step": step, "world": self.world, "states": states}
+        )
+        self.checkpoint_store.put_objects_atomic(
+            self._group_name(step),
+            {
+                "states.pkl": payload,
+                "manifest.json": json.dumps(
+                    {"step": int(step), "world": self.world}
+                ).encode(),
+            },
+        )
+
+    @staticmethod
+    def checkpoint_at(checkpoint_dir: str | Path | Any, step: int) -> dict | None:
+        """The committed checkpoint for one superstep (None if absent)."""
+        store = _object_store.as_store(checkpoint_dir)
+        group = BSPRuntime._group_name(step)
+        if not store.committed(group):
             return None
-        cands = sorted(d.glob("superstep_*.pkl"))
-        if not cands:
+        return pickle.loads(store.get_object(group, "states.pkl"))
+
+    @staticmethod
+    def latest_checkpoint(checkpoint_dir: str | Path | Any) -> dict | None:
+        store = _object_store.as_store(checkpoint_dir)
+        groups = [g for g in store.list_groups() if g.startswith("superstep_")]
+        if not groups:
             return None
-        with open(cands[-1], "rb") as f:
-            return pickle.load(f)
+        return pickle.loads(store.get_object(max(groups), "states.pkl"))
 
     # -- execution ------------------------------------------------------------
 
@@ -155,10 +185,13 @@ class BSPRuntime:
             new_states: list[Any] = [None] * self.world
             for rank in range(self.world):
                 attempt = 0
+                deadline_killed = False  # only this rank's re-invocation skips delay
                 while True:
                     t0 = time.perf_counter()
                     simulated_extra = (
-                        straggle_injector(idx, rank) if straggle_injector else 0.0
+                        straggle_injector(idx, rank)
+                        if straggle_injector and not deadline_killed
+                        else 0.0
                     )
                     try:
                         if fail_injector and fail_injector(idx, rank):
@@ -177,11 +210,12 @@ class BSPRuntime:
                         and elapsed > self.deadline_s
                         and attempt <= max_retries
                     ):
-                        # straggler mitigation: kill + re-invoke (fresh worker
-                        # has no injected delay)
+                        # straggler mitigation: kill + re-invoke.  The fresh
+                        # worker has no injected delay, but the injector stays
+                        # armed for every other rank and superstep.
                         attempt += 1
                         retries += 1
-                        straggle_injector_backup, straggle_injector = straggle_injector, None
+                        deadline_killed = True
                         continue
                     new_states[rank] = out
                     max_rank_s = max(max_rank_s, elapsed)

@@ -84,7 +84,7 @@ def preprocess_local(
     sel = np.isin(np.asarray(doc_ids), keep_ids)
     tokens = docs[sel].reshape(-1)
     ttab = Table.from_dict({"tok": tokens})
-    toks, mask = tensor.to_token_batches(ttab, "tok", batch, seq_len)
+    toks, mask = tensor.to_token_batches(ttab, "tok", batch, seq_len, nbatches=None)
     nbatches = tokens.size // (batch * seq_len)
     stats = PipelineStats(ndocs, int(joined.count), int(kept.count),
                           int(rep.count), max(nbatches, 1))

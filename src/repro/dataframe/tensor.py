@@ -22,17 +22,22 @@ def to_matrix(table: Table, columns: list[str], dtype=jnp.float32) -> jax.Array:
 
 
 def to_token_batches(
-    table: Table, token_col: str, batch: int, seq_len: int, pad_id: int = 0
+    table: Table, token_col: str, batch: int, seq_len: int, pad_id: int = 0,
+    nbatches: int | None = 1,
 ) -> tuple[jax.Array, jax.Array]:
-    """Pack a token column into [batch, seq_len] (+loss mask), truncating or
-    padding as needed.  Rows must already be in document order."""
-    need = batch * seq_len
+    """Pack a token column into [nbatches * batch, seq_len] (+loss mask),
+    truncating or padding as needed.  Rows must already be in document
+    order.  ``nbatches=None`` packs every full batch the tokens allow
+    (minimum one) instead of truncating the corpus to a single batch."""
+    if nbatches is None:
+        nbatches = max(int(table.valid_mask().sum()) // (batch * seq_len), 1)
+    need = nbatches * batch * seq_len
     toks = table.columns[token_col]
     mask = table.valid_mask()
     toks = jnp.where(mask, toks, pad_id)
     if toks.shape[0] < need:
         toks = jnp.pad(toks, (0, need - toks.shape[0]), constant_values=pad_id)
         mask = jnp.pad(mask, (0, need - mask.shape[0]), constant_values=False)
-    toks = toks[:need].reshape(batch, seq_len).astype(jnp.int32)
-    lmask = mask[:need].reshape(batch, seq_len)
+    toks = toks[:need].reshape(nbatches * batch, seq_len).astype(jnp.int32)
+    lmask = mask[:need].reshape(nbatches * batch, seq_len)
     return toks, lmask

@@ -1,16 +1,19 @@
-"""Distribution substrate: sharding rules, atomic checkpointing, and
+"""Distribution substrate: sharding rules, store-backed checkpointing, and
 int8 error-feedback gradient compression.
 
 This is the state-externalization layer the paper's serverless design
 needs (§VI fault tolerance): functions are short-lived, so training state
-must live outside any one process (``checkpoint``), the parameter layout
-must be derivable from config alone on any elastic restart (``sharding``),
-and bytes on the wire — the dominant cost at scale (§IV–V) — get the int8
-treatment (``compression``).
+must live outside any one process (``object_store`` + ``checkpoint``), the
+parameter layout must be derivable from config alone on any elastic restart
+(``sharding``), and bytes on the wire — the dominant cost at scale (§IV–V)
+— get the int8 treatment (``compression``).
 
-- ``repro.dist.sharding``     PartitionSpec rules for params / batches / caches
-- ``repro.dist.checkpoint``   atomic save / restore / latest (tmp-dir rename)
-- ``repro.dist.compression``  block int8 quantization + compressed_pmean
+- ``repro.dist.sharding``      PartitionSpec rules for params / batches / caches
+- ``repro.dist.object_store``  durable stores: LocalStore (atomic dir rename)
+                               and S3Store (put-then-commit-marker, priced ops)
+- ``repro.dist.checkpoint``    save / restore / latest / restore_sharded
+                               against either store
+- ``repro.dist.compression``   block int8 quantization + compressed_pmean
 """
 
-from repro.dist import checkpoint, compression, sharding  # noqa: F401
+from repro.dist import checkpoint, compression, object_store, sharding  # noqa: F401

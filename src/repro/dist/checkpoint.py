@@ -1,150 +1,353 @@
-"""Atomic local checkpointing for elastic (kill/resume) training.
+"""Store-backed checkpointing for elastic (kill/resume) training.
 
 Lambda-style workers have a bounded lifetime (paper §VI), so training state
 must be externalized at a cadence and restorable by a *fresh* process that
-only knows the config.  The layout is deliberately boring:
+only knows the config.  State lives in a pluggable object store
+(``repro.dist.object_store``): a local directory for single-host runs, a
+simulated S3 for the serverless scenarios the paper's §V says the
+architecture is missing.  The layout is deliberately boring — one store
+*group* per step:
 
-    <dir>/step_00000420/
-        manifest.json   step, user extra, and per-leaf path/shape/dtype
-        arrays.npz      one entry per pytree leaf
+    step_00000420/
+        manifest.json   step, user extra, per-leaf {obj, shape, dtype, nbytes}
+        a0.bin ...      one raw little-endian C-order object per pytree leaf
 
-Atomicity: everything is written into ``<dir>/.tmp-<uuid>`` and the
-directory is renamed into place with ``os.replace`` — a reader either sees
-a complete checkpoint or none at all, and a killed writer leaves only a
-``.tmp-*`` dir that the next ``save`` sweeps up.
+Atomicity is the store's contract (see ``object_store``): ``LocalStore``
+publishes by atomic directory rename (and recovers a re-save that crashed
+between its two renames, so ``latest()`` never goes backwards); ``S3Store``
+puts the leaf objects first and the manifest-bearing commit record last, so
+a writer killed between puts leaves an unmarked step that ``latest()``
+ignores.  Either way a reader sees a complete checkpoint or none at all.
 
 ``restore`` is shape-strict: a leaf present in ``like_tree`` but absent in
 the checkpoint raises ``KeyError``; a shape mismatch raises ``ValueError``.
 Silent partial restores are how elastic restarts corrupt runs.
+
+``restore_sharded`` is the elastic-resharding path: given the PartitionSpec
+tree of a *new* mesh (``dist.sharding.param_specs``), each rank reads only
+the byte ranges of each leaf its shard owns (ranged GETs, coalesced runs of
+the C-order layout), so restoring onto a different topology moves a
+fraction of the checkpoint instead of the whole thing.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import itertools
 import json
-import shutil
-import os
-import uuid
+import math
 from pathlib import Path
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 from jax.tree_util import tree_flatten_with_path, tree_unflatten
 
+from repro.dist.object_store import Store, as_store
 from repro.dist.treepath import path_str as _key_str
 
 _MANIFEST = "manifest.json"
-_ARRAYS = "arrays.npz"
 _STEP_PREFIX = "step_"
+
+# ranged restore issues at most this many GETs per leaf: when a shard's
+# C-order runs are more fragmented than this (inner-dim sharding), runs are
+# merged across the narrowest gaps — a few over-read bytes instead of one
+# priced round trip per run
+_MAX_RANGED_GETS = 256
 
 
 def _step_name(step: int) -> str:
     return f"{_STEP_PREFIX}{step:08d}"
 
 
-def _storable(arr: np.ndarray) -> np.ndarray:
-    """npz only round-trips builtin dtypes; store bf16 & friends as raw
-    same-width integers (the manifest keeps the real dtype)."""
-    if arr.dtype.kind in "biufc?":
-        return arr
-    return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+@dataclasses.dataclass(frozen=True)
+class CheckpointRef:
+    """Handle to one committed checkpoint inside a store (the store-backed
+    analogue of the ``<dir>/step_XXXXXXXX`` path the local layout returns)."""
+
+    store: Store
+    name: str
+
+    @property
+    def step(self) -> int:
+        return int(self.name[len(_STEP_PREFIX):])
 
 
-def _sweep_tmp(directory: Path) -> None:
-    for stale in directory.glob(".tmp-*"):
-        shutil.rmtree(stale, ignore_errors=True)
+def _resolve(ref: str | Path | CheckpointRef) -> tuple[Store, str]:
+    """(store, group) for a checkpoint path or ref."""
+    if isinstance(ref, CheckpointRef):
+        return ref.store, ref.name
+    path = Path(ref)
+    return as_store(path.parent), path.name
 
 
-def save(directory: str | Path, step: int, tree: Any, extra: dict | None = None) -> Path:
-    """Write ``tree`` as checkpoint ``step`` under ``directory`` atomically;
-    returns the final checkpoint path."""
-    directory = Path(directory)
-    directory.mkdir(parents=True, exist_ok=True)
-    _sweep_tmp(directory)
-    final = directory / _step_name(step)
-    tmp = directory / f".tmp-{uuid.uuid4().hex[:8]}"
-    tmp.mkdir()
-    try:
-        leaves, _ = tree_flatten_with_path(tree)
-        arrays: dict[str, np.ndarray] = {}
-        meta: dict[str, dict] = {}
-        for i, (path, leaf) in enumerate(leaves):
-            arr = np.asarray(jax.device_get(leaf))
-            arrays[f"a{i}"] = _storable(arr)
-            meta[_key_str(path)] = {
-                "i": i,
-                "shape": list(arr.shape),
-                "dtype": str(arr.dtype),
-            }
-        np.savez(tmp / _ARRAYS, **arrays)
-        manifest = {
-            "format": 1,
-            "step": int(step),
-            "extra": extra or {},
-            "leaves": meta,
+def save(
+    target: str | Path | Store, step: int, tree: Any, extra: dict | None = None
+) -> Path | CheckpointRef:
+    """Write ``tree`` as checkpoint ``step`` into ``target`` atomically.
+
+    ``target`` is a checkpoint directory (local layout, returns the final
+    checkpoint ``Path``) or a :class:`~repro.dist.object_store.Store`
+    (returns a :class:`CheckpointRef`).
+    """
+    store = as_store(target)
+    leaves, _ = tree_flatten_with_path(tree)
+    objects: dict[str, bytes] = {}
+    meta: dict[str, dict] = {}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        obj = f"a{i}.bin"
+        objects[obj] = arr.tobytes()
+        meta[_key_str(path)] = {
+            "obj": obj,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "nbytes": int(arr.nbytes),
         }
-        (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=1))
-        if final.exists():  # re-save of a step: replace, still atomically
-            graveyard = directory / f".tmp-old-{uuid.uuid4().hex[:8]}"
-            os.replace(final, graveyard)
-            os.replace(tmp, final)
-            shutil.rmtree(graveyard, ignore_errors=True)
-        else:
-            os.replace(tmp, final)
-    finally:
-        if tmp.exists():
-            shutil.rmtree(tmp, ignore_errors=True)
-        _sweep_tmp(directory)
-    return final
+    manifest = {
+        "format": 2,
+        "step": int(step),
+        "extra": extra or {},
+        "leaves": meta,
+    }
+    # the manifest is ordered last: on a put-then-marker store it is the
+    # commit marker, so leaf objects are always visible before it is
+    objects[_MANIFEST] = json.dumps(manifest, indent=1).encode()
+    name = _step_name(step)
+    store.put_objects_atomic(name, objects)
+    if isinstance(target, Store):
+        return CheckpointRef(store, name)
+    return Path(target) / name
 
 
-def read_manifest(path: str | Path) -> dict:
-    return json.loads((Path(path) / _MANIFEST).read_text())
+def read_manifest(ref: str | Path | CheckpointRef) -> dict:
+    store, group = _resolve(ref)
+    return json.loads(store.get_object(group, _MANIFEST))
 
 
-def restore(path: str | Path, like_tree: Any) -> Any:
+def _as_array(data: bytes, dtype: np.dtype, shape: tuple[int, ...]) -> jax.Array:
+    raw = np.frombuffer(data, dtype=np.uint8)
+    return jnp.asarray(raw.view(dtype).reshape(shape))
+
+
+def _leaf_meta(leaves_meta: dict, key: str, like, group: str) -> dict:
+    if key not in leaves_meta:
+        raise KeyError(
+            f"checkpoint {group} has no leaf {key!r} "
+            f"(has: {sorted(leaves_meta)[:8]}...)"
+        )
+    m = leaves_meta[key]
+    if tuple(m["shape"]) != tuple(like.shape):
+        raise ValueError(
+            f"shape mismatch for {key!r}: checkpoint "
+            f"{tuple(m['shape'])} vs expected {tuple(like.shape)}"
+        )
+    return m
+
+
+def restore(ref: str | Path | CheckpointRef, like_tree: Any) -> Any:
     """Load a checkpoint into the structure of ``like_tree``.
 
     Raises ``KeyError`` for leaves missing from the checkpoint and
     ``ValueError`` for shape mismatches (elastic restarts must never
     silently reinterpret state).
     """
-    path = Path(path)
-    manifest = read_manifest(path)
-    leaves_meta = manifest["leaves"]
-    with np.load(path / _ARRAYS) as data:
-        like_leaves, treedef = tree_flatten_with_path(like_tree)
-        out = []
-        for p, like in like_leaves:
-            key = _key_str(p)
-            if key not in leaves_meta:
-                raise KeyError(
-                    f"checkpoint {path} has no leaf {key!r} "
-                    f"(has: {sorted(leaves_meta)[:8]}...)"
-                )
-            m = leaves_meta[key]
-            if tuple(m["shape"]) != tuple(like.shape):
-                raise ValueError(
-                    f"shape mismatch for {key!r}: checkpoint "
-                    f"{tuple(m['shape'])} vs expected {tuple(like.shape)}"
-                )
-            raw = data[f"a{m['i']}"]
-            dtype = jnp.dtype(m["dtype"])
-            if raw.dtype != dtype:
-                raw = raw.view(dtype)
-            out.append(jnp.asarray(raw))
+    store, group = _resolve(ref)
+    leaves_meta = read_manifest(ref)["leaves"]
+    like_leaves, treedef = tree_flatten_with_path(like_tree)
+    out = []
+    for p, like in like_leaves:
+        key = _key_str(p)
+        m = _leaf_meta(leaves_meta, key, like, group)
+        data = store.get_object(group, m["obj"])
+        out.append(_as_array(data, jnp.dtype(m["dtype"]), tuple(m["shape"])))
     return tree_unflatten(treedef, out)
 
 
-def latest(directory: str | Path) -> Path | None:
-    """Newest complete checkpoint under ``directory`` (None when empty)."""
-    directory = Path(directory)
-    if not directory.is_dir():
+def latest(target: str | Path | Store) -> Path | CheckpointRef | None:
+    """Newest complete checkpoint in ``target`` (None when empty).
+
+    Only committed groups count: a writer killed mid-publish leaves an
+    unmarked step the store never lists, and an interrupted re-save of an
+    existing step is recovered (LocalStore) or still covered by the previous
+    commit record (S3Store) — the answer never goes backwards.
+    """
+    store = as_store(target)
+    steps = [g for g in store.list_groups() if g.startswith(_STEP_PREFIX)]
+    if not steps:
         return None
-    steps = sorted(
-        p
-        for p in directory.iterdir()
-        if p.is_dir() and p.name.startswith(_STEP_PREFIX) and (p / _MANIFEST).exists()
+    name = max(steps)
+    if isinstance(target, Store):
+        return CheckpointRef(store, name)
+    return Path(target) / name
+
+
+# -- resharded partial restore ----------------------------------------------
+
+
+def _axis_sizes(mesh_or_sizes) -> dict[str, int]:
+    if isinstance(mesh_or_sizes, Mapping):
+        return {str(k): int(v) for k, v in mesh_or_sizes.items()}
+    shape = mesh_or_sizes.shape  # Mesh / AbstractMesh
+    return {name: int(shape[name]) for name in mesh_or_sizes.axis_names}
+
+
+def _shard_bounds(
+    shape: tuple[int, ...],
+    spec: PartitionSpec,
+    sizes: dict[str, int],
+    coords: Mapping[str, int],
+) -> list[tuple[int, int]]:
+    """Per-dim [start, stop) owned by the shard at ``coords`` under ``spec``."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    bounds = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            bounds.append((0, dim))
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = math.prod(sizes[a] for a in axes)
+        if dim % n:
+            raise ValueError(f"dim {dim} not divisible by axes {axes} (x{n})")
+        index = 0
+        for a in axes:  # row-major over the joint axes, first axis slowest
+            index = index * sizes[a] + int(coords[a])
+        block = dim // n
+        bounds.append((index * block, (index + 1) * block))
+    return bounds
+
+
+def _element_runs(
+    shape: tuple[int, ...], bounds: list[tuple[int, int]]
+) -> list[tuple[int, int]]:
+    """Coalesced (offset, length) element runs of the C-order block at
+    ``bounds``, ascending — concatenating them yields the block in C order."""
+    nd = len(shape)
+    run_dim = -1
+    for d in range(nd - 1, -1, -1):
+        if bounds[d] != (0, shape[d]):
+            run_dim = d
+            break
+    if run_dim < 0:
+        return [(0, math.prod(shape) if shape else 1)]
+    strides = [math.prod(shape[d + 1:]) for d in range(nd)]  # elements
+    run_len = (bounds[run_dim][1] - bounds[run_dim][0]) * strides[run_dim]
+    runs: list[tuple[int, int]] = []
+    for outer in itertools.product(*(range(s, e) for s, e in bounds[:run_dim])):
+        off = sum(i * strides[d] for d, i in enumerate(outer))
+        off += bounds[run_dim][0] * strides[run_dim]
+        if runs and runs[-1][0] + runs[-1][1] == off:  # adjacent: coalesce
+            runs[-1] = (runs[-1][0], runs[-1][1] + run_len)
+        else:
+            runs.append((off, run_len))
+    return runs
+
+
+def _covering_ranges(
+    runs: list[tuple[int, int]], budget: int
+) -> list[tuple[int, int]]:
+    """Byte-minimal covering of ``runs`` by at most ``budget`` ranges.
+
+    Keeps the ``budget - 1`` widest inter-run gaps as split points and merges
+    across the rest — the smallest possible over-read for a fixed request
+    count (each range is one priced GET round trip).
+    """
+    if len(runs) <= budget:
+        return list(runs)
+    gaps = sorted(
+        (runs[i + 1][0] - (runs[i][0] + runs[i][1]), i)
+        for i in range(len(runs) - 1)
     )
-    return steps[-1] if steps else None
+    splits = sorted(i for _, i in gaps[-(budget - 1):])
+    ranges: list[tuple[int, int]] = []
+    start = runs[0][0]
+    for i in splits:
+        end = runs[i][0] + runs[i][1]
+        ranges.append((start, end - start))
+        start = runs[i + 1][0]
+    ranges.append((start, runs[-1][0] + runs[-1][1] - start))
+    return ranges
+
+
+def restore_sharded(
+    ref: str | Path | CheckpointRef,
+    like_tree: Any,
+    specs: Any,
+    mesh_or_sizes: Any,
+    coords: Mapping[str, int],
+    max_gets: int = _MAX_RANGED_GETS,
+) -> Any:
+    """Restore only this shard's slice of every leaf (elastic resharding).
+
+    ``like_tree`` carries the *global* shapes (validated against the
+    manifest exactly like :func:`restore`); ``specs`` is the matching
+    PartitionSpec tree from ``dist.sharding.param_specs`` for the *new*
+    mesh; ``coords`` maps each mesh axis name to this shard's index.
+    Returns the tree of local shard arrays.
+
+    Sharded leaves are fetched as ranged GETs of their C-order byte runs;
+    fragmented shards (inner-dim sharding) are merged across the narrowest
+    gaps down to ``max_gets`` requests per leaf, trading a few over-read
+    bytes for round trips.  Replicated leaves — and shards whose covering
+    plan would read nearly the whole object anyway — use one full GET.
+
+    The plan minimizes *bytes moved*, not single-reader latency: when every
+    shard of a new mesh restores concurrently, the store NIC is the shared
+    bottleneck (exactly the staged-channel model of §IV), so bytes are the
+    contended resource even though one reader in isolation would often be
+    faster issuing a single full GET on a high-``alpha`` channel like S3.
+    Tune ``max_gets`` down (toward full GETs) when per-request latency
+    dominates, e.g. restoring one shard alone.
+    """
+    store, group = _resolve(ref)
+    sizes = _axis_sizes(mesh_or_sizes)
+    leaves_meta = read_manifest(ref)["leaves"]
+    like_leaves, treedef = tree_flatten_with_path(like_tree)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: isinstance(s, PartitionSpec)
+    )
+    if len(spec_leaves) != len(like_leaves):
+        raise ValueError(
+            f"specs tree has {len(spec_leaves)} leaves, "
+            f"like_tree has {len(like_leaves)}"
+        )
+    out = []
+    for (p, like), spec in zip(like_leaves, spec_leaves):
+        key = _key_str(p)
+        m = _leaf_meta(leaves_meta, key, like, group)
+        shape = tuple(m["shape"])
+        dtype = jnp.dtype(m["dtype"])
+        bounds = _shard_bounds(shape, spec, sizes, coords)
+        shard_shape = tuple(e - s for s, e in bounds)
+        runs = _element_runs(shape, bounds)
+        nelems = max(math.prod(shape), 1)
+        if not shape or runs == [(0, nelems)]:  # replicated: whole leaf
+            data = store.get_object(group, m["obj"])
+            out.append(_as_array(data, dtype, shape))
+            continue
+        ranges = _covering_ranges(runs, max_gets)
+        if sum(length for _, length in ranges) >= nelems:
+            # the covering plan reads ~everything: one full GET, slice locally
+            data = store.get_object(group, m["obj"])
+            arr = _as_array(data, dtype, shape)
+            out.append(arr[tuple(slice(s, e) for s, e in bounds)])
+            continue
+        itemsize = dtype.itemsize
+        buffers = [
+            store.get_object(
+                group, m["obj"], start=off * itemsize,
+                stop=(off + length) * itemsize,
+            )
+            for off, length in ranges
+        ]
+        parts: list[bytes] = []
+        ci = 0
+        for off, length in runs:  # each run lies inside one covering range
+            while off + length > ranges[ci][0] + ranges[ci][1]:
+                ci += 1
+            lo = (off - ranges[ci][0]) * itemsize
+            parts.append(buffers[ci][lo: lo + length * itemsize])
+        out.append(_as_array(b"".join(parts), dtype, shard_shape))
+    return tree_unflatten(treedef, out)

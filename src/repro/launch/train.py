@@ -24,6 +24,7 @@ from repro import configs
 from repro.data import pipeline
 from repro.dist import checkpoint as ckpt
 from repro.dist import compression
+from repro.dist.object_store import Store
 from repro.models import api
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
@@ -40,13 +41,26 @@ def build_dataset(cfg, batch: int, seq_len: int, seed: int = 0):
     return (toks, mask), stats
 
 
-def data_iter(cfg, batch: int, seq_len: int, seed: int = 0):
-    """Infinite batches: re-synthesize corpus shards round-robin."""
+def data_iter(cfg, batch: int, seq_len: int, seed: int = 0, start: int = 0):
+    """Infinite size-``batch`` slices, aligned to the *global* step.
+
+    Each synthesized corpus shard is consumed as its ``n`` full batches
+    before the next shard is built (one synthesis per ``n`` steps, not one
+    per step).  The (shard, slice) cursor is a pure function of the global
+    step, so a run resumed at ``start`` fast-forwards through the shard
+    sequence and consumes exactly the slices an uninterrupted run would —
+    kill/resume loss traces stay identical (test_integration.py).
+    """
+    step = 0
     shard = 0
     while True:
         (toks, mask), _ = build_dataset(cfg, batch, seq_len, seed=seed + shard)
-        n = toks.shape[0] // batch if toks.ndim == 2 else 1
-        yield {"tokens": toks, "mask": mask.astype(jnp.float32)}
+        n = max(toks.shape[0] // batch, 1)
+        for i in range(n):
+            if step >= start:
+                sl = slice(i * batch, (i + 1) * batch)
+                yield {"tokens": toks[sl], "mask": mask[sl].astype(jnp.float32)}
+            step += 1
         shard += 1
 
 
@@ -57,7 +71,7 @@ def train(
     batch: int = 4,
     seq_len: int = 64,
     lr: float = 3e-3,
-    ckpt_dir: str | Path | None = None,
+    ckpt_dir: str | Path | Store | None = None,
     ckpt_every: int = 50,
     log_every: int = 10,
     resume: bool = False,
@@ -92,9 +106,9 @@ def train(
             f"({rep['ratio_vs_bf16']:.2f}x) per exchange")
 
     step_fn = jax.jit(make_train_step(cfg, opt_cfg))
-    # seed the iterator at `start` so a resumed run consumes the same data
-    # shards an uninterrupted run would (loss-trace continuity across kills)
-    it = data_iter(cfg, batch, seq_len, seed=start)
+    # start the iterator at the global step so a resumed run consumes the
+    # same data slices an uninterrupted run would (loss-trace continuity)
+    it = data_iter(cfg, batch, seq_len, start=start)
     losses = []
     t0 = time.time()
     end = steps if stop_after is None else min(steps, stop_after)
@@ -102,7 +116,9 @@ def train(
         batch_data = next(it)
         params, opt_state, metrics = step_fn(params, opt_state, batch_data)
         losses.append(float(metrics["loss"]))
-        if step % log_every == 0 or step == steps - 1:
+        # `end - 1`, not `steps - 1`: a --stop-after preemption drill must
+        # still log the last step it actually executed
+        if step % log_every == 0 or step == end - 1:
             log(f"step {step:4d} loss {losses[-1]:.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
                 f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)")

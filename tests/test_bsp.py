@@ -61,6 +61,21 @@ class TestSuperstepExecution:
         # the straggler's injected delay must not dominate the superstep
         assert report.supersteps[0].compute_s < 5.0
 
+    def test_straggle_injector_stays_armed_after_kill(self):
+        """A deadline kill re-invokes only that rank without its delay; the
+        injector must stay active for other ranks and later supersteps
+        (the old code disarmed it for the rest of the run)."""
+        delays = {(0, 1): 10.0, (0, 3): 10.0, (1, 2): 10.0}
+        rt = BSPRuntime(4, deadline_s=0.5)
+        states, report = rt.run(
+            [("a", _sum_step), ("b", _sum_step)], [0.0] * 4,
+            straggle_injector=lambda s, r: delays.get((s, r), 0.0),
+        )
+        assert states == [2.0] * 4
+        # both rank-1 and rank-3 stragglers killed in superstep 0, and the
+        # injector still fires for rank 2 in superstep 1
+        assert [s.retries for s in report.supersteps] == [2, 1]
+
 
 class TestCheckpointResume:
     def test_resume_from_checkpoint(self, tmp_path):
@@ -71,22 +86,43 @@ class TestCheckpointResume:
         # simulate crash after superstep 1: resume from its checkpoint
         ckpt = BSPRuntime.latest_checkpoint(tmp_path)
         assert ckpt["step"] == 2
-        import pickle
-        with open(tmp_path / "superstep_00001.pkl", "rb") as f:
-            ckpt1 = pickle.load(f)
+        ckpt1 = BSPRuntime.checkpoint_at(tmp_path, 1)
         rt2 = BSPRuntime(4, checkpoint_dir=tmp_path / "resume")
         resumed, report = rt2.run(steps, [None] * 4, resume_from=ckpt1)
         assert resumed == full
         assert len(report.supersteps) == 1  # only superstep 2 re-ran
+
+    def test_resume_from_s3_store_with_injector_still_armed(self):
+        """Superstep checkpoints through the simulated S3 store: resume from
+        the durable checkpoint AND keep straggler mitigation live after a
+        deadline kill in the resumed run."""
+        from repro.dist.object_store import S3Store
+
+        store = S3Store()
+        rt = BSPRuntime(4, checkpoint_dir=store, deadline_s=0.5)
+        steps = [("a", _sum_step), ("b", _sum_step), ("c", _sum_step)]
+        full, _ = rt.run(steps, [0.0] * 4)
+        assert store.op_time_s > 0  # checkpoint traffic is priced
+
+        ckpt = BSPRuntime.checkpoint_at(store, 1)
+        assert ckpt["step"] == 1 and ckpt["world"] == 4
+        delays = {(2, 0): 10.0, (2, 3): 10.0}
+        rt2 = BSPRuntime(4, deadline_s=0.5)
+        resumed, report = rt2.run(
+            steps, [None] * 4, resume_from=ckpt,
+            straggle_injector=lambda s, r: delays.get((s, r), 0.0),
+        )
+        assert resumed == full
+        # both injected stragglers in the resumed superstep were killed and
+        # re-invoked — the injector stayed armed through the first kill
+        assert [s.retries for s in report.supersteps] == [2]
 
     def test_elastic_resize(self, tmp_path):
         """Resume a 4-worker checkpoint on 8 workers (serverless elasticity)."""
         rt = BSPRuntime(4, checkpoint_dir=tmp_path)
         steps = [("a", _sum_step), ("b", _sum_step)]
         rt.run(steps[:1], [10.0, 20.0, 30.0, 40.0])
-        import pickle
-        with open(tmp_path / "superstep_00000.pkl", "rb") as f:
-            ckpt = pickle.load(f)
+        ckpt = BSPRuntime.checkpoint_at(tmp_path, 0)
 
         def repartition(states, new_world):
             # split each worker's scalar state in half
@@ -103,8 +139,23 @@ class TestCheckpointResume:
     def test_atomic_publish(self, tmp_path):
         rt = BSPRuntime(2, checkpoint_dir=tmp_path)
         rt.run([("a", _sum_step)], [0.0, 0.0])
-        assert not list(tmp_path.glob("*.tmp"))
-        assert list(tmp_path.glob("superstep_*.pkl"))
+        # no writer garbage left behind, only committed step groups
+        assert not list(tmp_path.glob(".tmp-*"))
+        groups = list(tmp_path.glob("superstep_*"))
+        assert groups and all((g / "manifest.json").exists() for g in groups)
+
+    def test_stale_tmp_swept_and_ignored(self, tmp_path):
+        """A writer killed mid-publish leaves a .tmp-* staging dir: readers
+        ignore it and the next publish sweeps it (the old flat-pkl layout
+        left .tmp files forever)."""
+        rt = BSPRuntime(2, checkpoint_dir=tmp_path)
+        rt.run([("a", _sum_step)], [0.0, 0.0])
+        stale = tmp_path / ".tmp-deadbeef"
+        stale.mkdir()
+        (stale / "states.pkl").write_bytes(b"partial garbage")
+        assert BSPRuntime.latest_checkpoint(tmp_path)["step"] == 0
+        rt.run([("a", _sum_step), ("b", _sum_step)], [1.0, 1.0])
+        assert not list(tmp_path.glob(".tmp-*"))
 
 
 class TestTimeModel:

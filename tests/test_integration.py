@@ -65,6 +65,29 @@ class TestTrainLoop:
         assert len(first) == 10 and len(rest) == 10
         np.testing.assert_allclose(first + rest, ref, rtol=1e-4, atol=1e-5)
 
+    def test_elastic_restart_via_s3_store(self, tmp_path):
+        """Same kill/resume drill with durable state in the simulated S3
+        store — the serverless path: a fresh worker restores from object
+        storage and reproduces the uninterrupted loss trace, and the
+        checkpoint traffic is priced into the op log."""
+        from repro.dist import checkpoint as ckpt
+        from repro.dist.object_store import S3Store
+
+        cfg = configs.get("minicpm-2b").reduced(num_layers=2, d_model=64, d_ff=128)
+        kw = dict(batch=2, seq_len=32, ckpt_every=10, log=lambda *a: None)
+        _, ref = train(cfg, steps=20, ckpt_dir=tmp_path / "ref", **kw)
+
+        store = S3Store()
+        _, first = train(cfg, steps=20, stop_after=10, ckpt_dir=store, **kw)
+        latest = ckpt.latest(store)
+        assert latest is not None and latest.name == "step_00000010"
+        assert ckpt.read_manifest(latest)["step"] == 10
+        assert store.op_time_s > 0 and store.puts > 0  # priced PUT traffic
+
+        _, rest = train(cfg, steps=20, ckpt_dir=store, resume=True, **kw)
+        assert len(first) == 10 and len(rest) == 10
+        np.testing.assert_allclose(first + rest, ref, rtol=1e-4, atol=1e-5)
+
     def test_wsd_schedule_arch(self, tmp_path):
         cfg = configs.get("minicpm-2b").reduced(num_layers=2, d_model=64, d_ff=128)
         assert cfg.schedule == "wsd"

@@ -1,0 +1,260 @@
+"""Object-store contract: identical save/restore/latest semantics across
+LocalStore and S3Store, atomic publish under injected writer death, the
+re-save crash window, ranged resharded restore, and op pricing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import netsim
+from repro.dist import checkpoint as ckpt
+from repro.dist import object_store as obs
+
+
+def _tree(scale=1.0):
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) * scale,
+        "nested": {"b": jnp.ones((6,), jnp.bfloat16), "step": jnp.asarray(7)},
+    }
+
+
+def _assert_trees_equal(t1, t2):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+@pytest.fixture(params=["local", "s3"])
+def store(request, tmp_path):
+    return obs.LocalStore(tmp_path) if request.param == "local" else obs.S3Store()
+
+
+class TestContract:
+    """One suite, both backends: the checkpoint layer must not care."""
+
+    def test_roundtrip(self, store):
+        t = _tree()
+        ref = ckpt.save(store, 3, t, extra={"note": "x"})
+        _assert_trees_equal(t, ckpt.restore(ref, t))
+        m = ckpt.read_manifest(ref)
+        assert m["step"] == 3 and m["extra"]["note"] == "x"
+
+    def test_dtypes_survive(self, store):
+        t = _tree()
+        restored = ckpt.restore(ckpt.save(store, 0, t), t)
+        assert restored["nested"]["b"].dtype == jnp.bfloat16
+        assert restored["nested"]["step"].dtype == jnp.asarray(7).dtype
+
+    def test_latest_orders_steps(self, store):
+        assert ckpt.latest(store) is None
+        ckpt.save(store, 1, _tree())
+        ckpt.save(store, 2, _tree())
+        assert ckpt.latest(store).name == "step_00000002"
+        ckpt.save(store, 10, _tree())
+        assert ckpt.latest(store).name == "step_00000010"
+        assert ckpt.latest(store).step == 10
+
+    def test_resave_same_step_last_writer_wins(self, store):
+        ckpt.save(store, 5, _tree(1.0))
+        ckpt.save(store, 5, _tree(2.0))
+        assert ckpt.latest(store).step == 5
+        _assert_trees_equal(_tree(2.0), ckpt.restore(ckpt.latest(store), _tree()))
+
+    def test_shape_mismatch_detected(self, store):
+        ref = ckpt.save(store, 0, {"a": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            ckpt.restore(ref, {"a": jnp.zeros((3, 2))})
+
+    def test_missing_leaf_detected(self, store):
+        ref = ckpt.save(store, 0, {"a": jnp.zeros(2)})
+        with pytest.raises(KeyError):
+            ckpt.restore(ref, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+    def test_sharded_restore_matches_full(self, store):
+        """Reassembling every shard reproduces the unsharded checkpoint."""
+        t = {
+            "w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "v": jnp.arange(16, dtype=jnp.float32),
+            "norm": jnp.ones((8,), jnp.float32),
+        }
+        specs = {"w": P(None, "model"), "v": P("model"), "norm": P()}
+        ref = ckpt.save(store, 1, t)
+        shards = [
+            ckpt.restore_sharded(ref, t, specs, {"model": 4}, {"model": i})
+            for i in range(4)
+        ]
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(s["w"]) for s in shards], axis=1),
+            np.asarray(t["w"]),
+        )
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(s["v"]) for s in shards]),
+            np.asarray(t["v"]),
+        )
+        for s in shards:  # replicated leaf: every shard gets the whole thing
+            np.testing.assert_array_equal(np.asarray(s["norm"]), np.asarray(t["norm"]))
+
+
+class TestLocalFaults:
+    def test_killed_writer_leaves_no_visible_step(self, tmp_path):
+        store = obs.LocalStore(tmp_path)
+        ckpt.save(store, 1, _tree())
+        # a writer killed mid-publish leaves only a .tmp-* staging dir
+        stale = tmp_path / ".tmp-deadbeef"
+        stale.mkdir()
+        (stale / "a0.bin").write_bytes(b"partial")
+        assert ckpt.latest(store).step == 1  # unpublished work is invisible
+        ckpt.save(store, 2, _tree())  # next save sweeps the garbage
+        assert not list(tmp_path.glob(".tmp-*"))
+
+    def test_resave_crash_between_renames_recovers(self, tmp_path, monkeypatch):
+        """Kill the writer between the park rename and the publish rename:
+        latest() must still return the step (with the OLD content) — it
+        never goes backwards."""
+        store = obs.LocalStore(tmp_path)
+        ckpt.save(store, 7, _tree(1.0))
+
+        import os as _os
+        real_replace = _os.replace
+        calls = {"n": 0}
+
+        def crashing_replace(src, dst):
+            calls["n"] += 1
+            if calls["n"] == 2:  # the publish rename of the re-save
+                raise obs.WriterKilled("crashed between the two renames")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(obs.os, "replace", crashing_replace)
+        with pytest.raises(obs.WriterKilled):
+            ckpt.save(store, 7, _tree(2.0))
+        monkeypatch.setattr(obs.os, "replace", real_replace)
+
+        latest = ckpt.latest(store)  # housekeeping un-parks the old content
+        assert latest is not None and latest.step == 7
+        _assert_trees_equal(_tree(1.0), ckpt.restore(latest, _tree()))
+        # and the step remains writable afterwards
+        ckpt.save(store, 7, _tree(3.0))
+        _assert_trees_equal(_tree(3.0), ckpt.restore(ckpt.latest(store), _tree()))
+
+
+class TestS3Faults:
+    @pytest.mark.parametrize("surviving_puts", [0, 1, 3])
+    def test_kill_between_puts_leaves_step_unmarked(self, surviving_puts):
+        store = obs.S3Store()
+        store.fail_after_puts = surviving_puts
+        with pytest.raises(obs.WriterKilled):
+            ckpt.save(store, 4, _tree())
+        store.fail_after_puts = None
+        assert ckpt.latest(store) is None  # no commit marker => no checkpoint
+        ckpt.save(store, 4, _tree())  # retried publish succeeds and sweeps
+        assert ckpt.latest(store).step == 4
+
+    def test_resave_kill_keeps_old_generation_readable(self):
+        store = obs.S3Store()
+        ckpt.save(store, 9, _tree(1.0))
+        store.fail_after_puts = 2  # dies before the new commit record lands
+        with pytest.raises(obs.WriterKilled):
+            ckpt.save(store, 9, _tree(2.0))
+        store.fail_after_puts = None
+        latest = ckpt.latest(store)
+        assert latest.step == 9  # never goes backwards...
+        _assert_trees_equal(_tree(1.0), ckpt.restore(latest, _tree()))  # ...or torn
+
+
+class TestRangedRestore:
+    def test_ranged_reads_strictly_fewer_bytes(self):
+        store = obs.S3Store()
+        t = {"w": jnp.zeros((64, 64), jnp.float32), "b": jnp.zeros((64,), jnp.float32)}
+        ref = ckpt.save(store, 1, t)
+        store.reset_ops()
+        ckpt.restore(ref, t)
+        full_bytes, full_time = store.bytes_got, store.op_time_s
+        store.reset_ops()
+        specs = {"w": P("model"), "b": P("model")}
+        ckpt.restore_sharded(ref, t, specs, {"model": 4}, {"model": 2})
+        assert store.bytes_got < full_bytes
+        assert store.op_time_s < full_time  # dim0 shards: fewer bytes AND trips
+
+    def test_inner_dim_sharding_coalesces_to_budget(self):
+        """More runs than the GET budget: ranges merge across the narrowest
+        gaps, the result is exact, and the request count stays bounded."""
+        store = obs.S3Store()
+        t = {"w": jnp.arange(16 * 12, dtype=jnp.float32).reshape(16, 12)}
+        ref = ckpt.save(store, 1, t)
+        specs = {"w": P(None, "model")}  # 16 runs of 4 elements, budget 4
+        store.reset_ops()
+        shard = ckpt.restore_sharded(
+            ref, t, specs, {"model": 3}, {"model": 1}, max_gets=4
+        )
+        np.testing.assert_array_equal(
+            np.asarray(shard["w"]), np.arange(16 * 12).reshape(16, 12)[:, 4:8]
+        )
+        assert store.gets <= 1 + 4  # manifest + at most the budget
+
+    def test_joint_axis_sharding(self):
+        store = obs.S3Store()
+        t = {"e": jnp.arange(8 * 3, dtype=jnp.float32).reshape(8, 3)}
+        specs = {"e": P(("data", "model"))}
+        ref = ckpt.save(store, 0, t)
+        sizes = {"data": 2, "model": 2}
+        got = [
+            np.asarray(
+                ckpt.restore_sharded(
+                    ref, t, specs, sizes, {"data": d, "model": m}
+                )["e"]
+            )
+            for d in range(2)
+            for m in range(2)
+        ]
+        np.testing.assert_array_equal(
+            np.concatenate(got, axis=0), np.asarray(t["e"])
+        )
+
+    def test_global_shape_still_validated(self):
+        store = obs.S3Store()
+        ref = ckpt.save(store, 0, {"w": jnp.zeros((8, 8))})
+        with pytest.raises(ValueError):
+            ckpt.restore_sharded(
+                ref, {"w": jnp.zeros((4, 8))}, {"w": P("model")},
+                {"model": 4}, {"model": 0},
+            )
+
+
+class TestPricing:
+    def test_s3_ops_priced_by_channel(self):
+        store = obs.S3Store()
+        store.put_objects_atomic("g", {"a": b"x" * 1000})
+        ch = netsim.S3_STAGED
+        per_request = ch.alpha_s + ch.store_alpha_s
+        put = next(o for o in store.ops if o.kind == "put" and o.nbytes == 1000)
+        assert put.time_s == pytest.approx(per_request + 1000 * ch.beta_s_per_byte)
+        assert store.op_time_s > 0
+
+    def test_local_ops_cost_zero_model_time(self, tmp_path):
+        store = obs.LocalStore(tmp_path)
+        store.put_objects_atomic("g", {"a": b"x" * 1000})
+        store.get_object("g", "a")
+        assert store.op_time_s == 0.0
+        assert store.bytes_put == 1000 and store.bytes_got == 1000
+
+    def test_request_cost_matches_cost_model(self):
+        from repro.core.cost_model import S3_USD_PER_GET, S3_USD_PER_PUT
+
+        store = obs.S3Store()
+        store.put_objects_atomic("g", {"a": b"12", "b": b"34"})
+        store.get_object("g", "a")
+        # 2 objects + 1 commit record = 3 puts, 1 get
+        assert store.request_cost_usd() == pytest.approx(
+            3 * S3_USD_PER_PUT + 1 * S3_USD_PER_GET
+        )
+
+    def test_ranged_get_priced_at_range_bytes(self):
+        store = obs.S3Store()
+        store.put_objects_atomic("g", {"a": bytes(range(256)) * 16})
+        store.reset_ops()
+        data = store.get_object("g", "a", start=16, stop=48)
+        assert data == (bytes(range(256)) * 16)[16:48]
+        assert store.ops[-1].nbytes == 32
