@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   cost_analysis      Figs 15/16 ($0.17 NAT, $0.032 redis join, $3.25 campaign)
   roofline           §Roofline table from the dry-run artifacts
   ckpt_store         checkpoint store: local vs s3-priced, full vs ranged restore
+  collective_algos   tuned algorithm selection vs fixed schedules (engine sweep)
 """
 
 from __future__ import annotations
@@ -22,6 +23,7 @@ import time
 def main() -> None:
     from benchmarks import (
         ckpt_store,
+        collective_algos,
         collectives_micro,
         comm_substrates,
         cost_analysis,
@@ -42,6 +44,7 @@ def main() -> None:
         ("cost_analysis", cost_analysis),
         ("roofline", roofline),
         ("ckpt_store", ckpt_store),
+        ("collective_algos", collective_algos),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

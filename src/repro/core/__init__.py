@@ -1,6 +1,14 @@
 """Core: the paper's contribution — serverless communicator, BSP runtime,
 NAT-traversal control plane, network/cost models."""
 
+from repro.core.algorithms import (  # noqa: F401
+    Choice,
+    DecisionCache,
+    algorithm_time,
+    algorithms_for,
+    select_algorithm,
+    tuned_time,
+)
 from repro.core.communicator import (  # noqa: F401
     CollectiveKind,
     CommEvent,

@@ -50,6 +50,27 @@ def reduce_scatter(x: jax.Array, axis: str, *, dim: int = 0) -> jax.Array:
     return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
 
 
+def allreduce_decomposed(x: jax.Array, axis: str, *, mean: bool = False) -> jax.Array:
+    """Rabenseifner lowering: allreduce as reduce_scatter + all_gather.
+
+    This is the schedule the cost engine selects for large-message
+    reductions (bandwidth term ``2 (P-1)/P n B`` instead of the tree's
+    per-hop full payload).  The payload is flattened and zero-padded to a
+    multiple of the axis size so ``psum_scatter(tiled)`` divides evenly;
+    numerically identical to ``lax.psum`` / ``lax.pmean`` (test_spmd).
+    """
+    p = lax.axis_size(axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    scattered = lax.psum_scatter(flat, axis, scatter_dimension=0, tiled=True)
+    if mean:
+        scattered = scattered / p
+    full = lax.all_gather(scattered, axis, axis=0, tiled=True)
+    return full[: x.size].reshape(x.shape)
+
+
 def allgather(x: jax.Array, axis: str, *, dim: int = 0) -> jax.Array:
     return lax.all_gather(x, axis, axis=dim, tiled=True)
 

@@ -85,13 +85,17 @@ class BSPRuntime:
         checkpoint_dir: str | Path | Any | None = None,
         deadline_s: float | None = None,
         cpu_scale: float = 1.0,
+        algorithm: str = "auto",
     ):
         self.world = int(world_size)
         self.platform = platform
         channel = (
             netsim.CHANNELS[channel_env] if channel_env else platform.channel
         )
-        self.comm = Communicator(self.world, channel)
+        # algorithm: collective schedule policy for every priced exchange —
+        # "auto" (tuned engine) or "fixed" (calibrated paper schedule)
+        self.algorithm = algorithm
+        self.comm = Communicator(self.world, channel, algorithm=algorithm)
         # checkpoint_dir: a directory (wrapped in a LocalStore) or any
         # dist.object_store.Store — the same durable-state plane train.py uses
         self.checkpoint_store = (
@@ -222,7 +226,10 @@ class BSPRuntime:
                     break
             states = new_states
             comm_s = self.comm.comm_time_s
-            barrier_s = netsim.collective_time(self.comm.channel, "barrier", self.world, 0)
+            barrier_s = netsim.collective_time(
+                self.comm.channel, "barrier", self.world, 0,
+                algorithm=self.algorithm,
+            )
             reports.append(
                 SuperstepReport(idx, name, max_rank_s, comm_s, retries, barrier_s)
             )

@@ -26,6 +26,36 @@ pre-encoded blocks (see ``repro.dist.compression``), pricing each event at
 the post-codec byte count while logging the logical payload in
 ``CommEvent.raw_bytes`` — so the §IV time/cost model sees the real wire and
 the compression ratio stays observable per event.
+
+Algorithm selection (``repro.core.algorithms``)
+-----------------------------------------------
+Every collective takes ``algorithm=`` — ``"auto"`` (default) asks the tuned
+engine for the min-modeled-time schedule, ``"fixed"`` prices the calibrated
+paper schedule (binomial tree / pairwise / monolithic staging), any other
+name prices that schedule explicitly.  The chosen schedule lands in
+``CommEvent.algo``.  Where each schedule wins:
+
+    collective      channel     small messages         large messages
+    --------------  ----------  ---------------------  ----------------------
+    allreduce       direct      recursive_doubling     rabenseifner
+                                (r*a: half the tree's  (reduce-scatter +
+                                two phases)            allgather, 2(P-1)/P nB)
+    reduce_scatter  direct      recursive_halving      recursive_halving/ring
+    allgather(v)    direct      recursive_doubling     recursive_doubling
+    alltoall(v)     direct      bruck (log2 P rounds)  pairwise ((P-1)/P
+                                                       bandwidth share)
+    bcast           direct      binomial_tree          scatter_allgather
+    any             redis / s3  staged_chunked: k-chunk non-blocking pipelined
+                                PUT/GET (round-trips overlapped; per-request
+                                processing still charged) beats the blocking
+                                monolithic PUT-then-GET except for tiny
+                                non-alltoall payloads on redis; k grows with
+                                the payload.
+
+The paper's Fig 12 observation that AllReduce is *latency-bound* at 32 nodes
+is exactly why recursive doubling halves the modeled time there, and why the
+tuned rows of ``benchmarks/collective_algos.py`` beat the fixed binomial
+tree by >1.3x on large dp reductions.
 """
 
 from __future__ import annotations
@@ -36,6 +66,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.core import algorithms as _algorithms
 from repro.core import netsim
 
 
@@ -61,6 +92,11 @@ class CommEvent:
     compressed collective); ``raw_bytes`` is the logical payload before
     compression, defaulting to the wire bytes for uncompressed events, so
     ``raw_bytes / bytes_per_rank`` is the per-event compression ratio.
+    ``algo`` is the schedule the engine chose to price this event ("fixed"
+    for the calibrated paper schedule).  Rooted collectives whose wire total
+    is not a multiple of the world size carry it exactly in ``wire_total``
+    (``bytes_per_rank`` is a ceil-divided share, so ``bytes_per_rank * world``
+    would over-report by up to P-1 bytes).
     """
 
     kind: CollectiveKind
@@ -68,6 +104,8 @@ class CommEvent:
     bytes_per_rank: int     # payload owned by one rank entering the collective
     time_s: float           # modeled wall time under this backend's channel
     raw_bytes: int | None = None  # pre-codec payload per rank; None => wire
+    algo: str = "fixed"     # schedule chosen by the engine for this event
+    wire_total: int | None = None  # exact wire bytes; None => bytes_per_rank*world
 
     def __post_init__(self):
         if self.raw_bytes is None:
@@ -75,10 +113,17 @@ class CommEvent:
 
     @property
     def total_bytes(self) -> int:
+        if self.wire_total is not None:
+            return self.wire_total
         return self.bytes_per_rank * self.world
 
     @property
     def total_raw_bytes(self) -> int:
+        # rooted events with a defaulted raw_bytes (uncompressed): the exact
+        # wire total IS the logical total — multiplying the ceil-divided
+        # share back up would re-introduce the inflation wire_total removes
+        if self.wire_total is not None and self.raw_bytes == self.bytes_per_rank:
+            return self.wire_total
         return self.raw_bytes * self.world
 
     @property
@@ -98,13 +143,22 @@ class Communicator:
     world_size: number of ranks.
     channel:    a :class:`netsim.ChannelModel` (direct / redis / s3) that
                 prices each collective. Defaults to Lambda direct TCP.
+    algorithm:  default schedule for every collective — "auto" (tuned
+                engine), "fixed" (calibrated paper schedule), or a named
+                schedule; overridable per call.
     """
 
-    def __init__(self, world_size: int, channel: netsim.ChannelModel | None = None):
+    def __init__(
+        self,
+        world_size: int,
+        channel: netsim.ChannelModel | None = None,
+        algorithm: str = "auto",
+    ):
         if world_size < 1:
             raise ValueError("world_size must be >= 1")
         self.world_size = int(world_size)
         self.channel = channel or netsim.LAMBDA_DIRECT
+        self.algorithm = algorithm
         self.events: list[CommEvent] = []
         # non-blocking handles: id -> (kind, result); popped on wait() so a
         # long BSP run can issue millions of iops without growing this map
@@ -118,13 +172,31 @@ class Communicator:
         kind: CollectiveKind,
         bytes_per_rank: int,
         raw_bytes: int | None = None,
+        *,
+        algorithm: str | None = None,
+        wire_total: int | None = None,
     ) -> CommEvent:
-        t = netsim.collective_time(
-            self.channel, kind.value, self.world_size, bytes_per_rank
-        )
+        algorithm = self.algorithm if algorithm is None else algorithm
+        if algorithm == "fixed":
+            algo_name = "fixed"
+            t = netsim.collective_time(
+                self.channel, kind.value, self.world_size, bytes_per_rank
+            )
+        elif algorithm == "auto":
+            choice = _algorithms.select_algorithm(
+                kind.value, self.world_size, bytes_per_rank, self.channel
+            )
+            algo_name, t = choice.algorithm, choice.time_s
+        else:
+            algo_name = algorithm
+            t = _algorithms.algorithm_time(
+                self.channel, kind.value, self.world_size, bytes_per_rank, algorithm
+            )
         ev = CommEvent(
             kind, self.world_size, int(bytes_per_rank), t,
             raw_bytes=None if raw_bytes is None else int(raw_bytes),
+            algo=algo_name,
+            wire_total=None if wire_total is None else int(wire_total),
         )
         self.events.append(ev)
         return ev
@@ -150,43 +222,50 @@ class Communicator:
 
     # -- collectives (semantics identical across backends) -------------------
 
-    def barrier(self) -> None:
-        self._record(CollectiveKind.BARRIER, 0)
+    def barrier(self, algorithm: str | None = None) -> None:
+        self._record(CollectiveKind.BARRIER, 0, algorithm=algorithm)
 
     def allreduce(
-        self, xs: Sequence[np.ndarray], op: Callable = np.add
+        self, xs: Sequence[np.ndarray], op: Callable = np.add,
+        algorithm: str | None = None,
     ) -> list[np.ndarray]:
         self._check_world(xs)
         acc = np.asarray(xs[0]).copy()
         for x in xs[1:]:
             acc = op(acc, np.asarray(x))
-        self._record(CollectiveKind.ALLREDUCE, _nbytes(xs[0]))
+        self._record(CollectiveKind.ALLREDUCE, _nbytes(xs[0]), algorithm=algorithm)
         return [acc.copy() for _ in range(self.world_size)]
 
     def reduce_scatter(
-        self, xs: Sequence[np.ndarray], op: Callable = np.add
+        self, xs: Sequence[np.ndarray], op: Callable = np.add,
+        algorithm: str | None = None,
     ) -> list[np.ndarray]:
-        """Reduce then scatter equal chunks along axis 0."""
+        """Reduce then scatter equal chunks along axis 0 (priced as ONE
+        phase moving (P-1)/P of the data, not a full allreduce)."""
         self._check_world(xs)
         acc = np.asarray(xs[0]).copy()
         for x in xs[1:]:
             acc = op(acc, np.asarray(x))
         if acc.shape[0] % self.world_size:
             raise ValueError("reduce_scatter requires axis0 divisible by world")
-        self._record(CollectiveKind.REDUCE_SCATTER, _nbytes(xs[0]))
+        self._record(CollectiveKind.REDUCE_SCATTER, _nbytes(xs[0]), algorithm=algorithm)
         return list(np.split(acc, self.world_size, axis=0))
 
-    def allgather(self, xs: Sequence[np.ndarray]) -> list[np.ndarray]:
+    def allgather(
+        self, xs: Sequence[np.ndarray], algorithm: str | None = None
+    ) -> list[np.ndarray]:
         """Fixed-size allgather: every rank gets concat(xs) along axis 0."""
         self._check_world(xs)
         shapes = {np.asarray(x).shape for x in xs}
         if len(shapes) != 1:
             raise ValueError("allgather requires equal shapes; use allgatherv")
         out = np.concatenate([np.asarray(x) for x in xs], axis=0)
-        self._record(CollectiveKind.ALLGATHER, _nbytes(xs[0]))
+        self._record(CollectiveKind.ALLGATHER, _nbytes(xs[0]), algorithm=algorithm)
         return [out.copy() for _ in range(self.world_size)]
 
-    def allgatherv(self, xs: Sequence[np.ndarray]) -> list[np.ndarray]:
+    def allgatherv(
+        self, xs: Sequence[np.ndarray], algorithm: str | None = None
+    ) -> list[np.ndarray]:
         """Variable-length allgather (the paper's FMI extension, §VI).
 
         Implemented as count-allgather followed by payload exchange — the same
@@ -194,28 +273,36 @@ class Communicator:
         """
         self._check_world(xs)
         counts = [int(np.asarray(x).shape[0]) for x in xs]
-        self._record(CollectiveKind.ALLGATHER, np.dtype(np.int64).itemsize)
+        self._record(
+            CollectiveKind.ALLGATHER, np.dtype(np.int64).itemsize,
+            algorithm=algorithm,
+        )
         out = np.concatenate([np.asarray(x) for x in xs], axis=0) if sum(counts) else np.asarray(xs[0])[:0]
         self._record(
-            CollectiveKind.ALLGATHERV, max(_nbytes(x) for x in xs)
+            CollectiveKind.ALLGATHERV, max(_nbytes(x) for x in xs),
+            algorithm=algorithm,
         )
         return [out.copy() for _ in range(self.world_size)]
 
-    def alltoall(self, sends: Sequence[Sequence[np.ndarray]]) -> list[list[np.ndarray]]:
+    def alltoall(
+        self, sends: Sequence[Sequence[np.ndarray]],
+        algorithm: str | None = None,
+    ) -> list[list[np.ndarray]]:
         """sends[src][dst] -> recvs[dst][src]; equal-shape chunks."""
         self._check_world(sends)
         for row in sends:
             if len(row) != self.world_size:
                 raise ValueError("alltoall needs a full P x P send matrix")
         bytes_per_rank = sum(_nbytes(b) for b in sends[0])
-        self._record(CollectiveKind.ALLTOALL, bytes_per_rank)
+        self._record(CollectiveKind.ALLTOALL, bytes_per_rank, algorithm=algorithm)
         return [
             [np.asarray(sends[src][dst]).copy() for src in range(self.world_size)]
             for dst in range(self.world_size)
         ]
 
     def alltoallv(
-        self, sends: Sequence[Sequence[np.ndarray]]
+        self, sends: Sequence[Sequence[np.ndarray]],
+        algorithm: str | None = None,
     ) -> tuple[list[list[np.ndarray]], np.ndarray]:
         """Variable-length all-to-all — the shuffle primitive (paper §III-A:
         "Cylon channels API implements the AllToAll operation").
@@ -227,10 +314,10 @@ class Communicator:
             [[int(np.asarray(b).shape[0]) for b in row] for row in sends], dtype=np.int64
         )
         # phase 1: exchange counts (an alltoall of one int per pair)
-        self._record(CollectiveKind.ALLTOALL, self.world_size * 8)
+        self._record(CollectiveKind.ALLTOALL, self.world_size * 8, algorithm=algorithm)
         # phase 2: payload
         max_payload = max(sum(_nbytes(b) for b in row) for row in sends)
-        self._record(CollectiveKind.ALLTOALLV, max_payload)
+        self._record(CollectiveKind.ALLTOALLV, max_payload, algorithm=algorithm)
         recvs = [
             [np.asarray(sends[src][dst]).copy() for src in range(self.world_size)]
             for dst in range(self.world_size)
@@ -238,7 +325,8 @@ class Communicator:
         return recvs, counts
 
     def compressed_alltoallv(
-        self, sends: Sequence[Sequence[Any]]
+        self, sends: Sequence[Sequence[Any]],
+        algorithm: str | None = None,
     ) -> list[list[Any]]:
         """Variable-length all-to-all over *pre-encoded* payload blocks.
 
@@ -258,49 +346,65 @@ class Communicator:
             if len(row) != self.world_size:
                 raise ValueError("alltoallv needs a full P x P send matrix")
         # phase 1: exchange per-pair sizes (one int per destination)
-        self._record(CollectiveKind.ALLTOALL, self.world_size * 8)
+        self._record(CollectiveKind.ALLTOALL, self.world_size * 8, algorithm=algorithm)
         # phase 2: payload, priced at the compressed wire size
         wire = max(sum(int(b.wire_nbytes) for b in row) for row in sends)
         raw = max(sum(int(b.raw_nbytes) for b in row) for row in sends)
-        self._record(CollectiveKind.ALLTOALLV, wire, raw_bytes=raw)
+        self._record(
+            CollectiveKind.ALLTOALLV, wire, raw_bytes=raw, algorithm=algorithm
+        )
         return [
             [sends[src][dst] for src in range(self.world_size)]
             for dst in range(self.world_size)
         ]
 
-    def bcast(self, x: np.ndarray, root: int = 0) -> list[np.ndarray]:
+    def bcast(
+        self, x: np.ndarray, root: int = 0, algorithm: str | None = None
+    ) -> list[np.ndarray]:
         self._check_rank(root)
-        self._record(CollectiveKind.BCAST, _nbytes(x))
+        self._record(CollectiveKind.BCAST, _nbytes(x), algorithm=algorithm)
         return [np.asarray(x).copy() for _ in range(self.world_size)]
 
     def gather(
-        self, xs: Sequence[np.ndarray], root: int = 0
+        self, xs: Sequence[np.ndarray], root: int = 0,
+        algorithm: str | None = None,
     ) -> list[list[np.ndarray] | None]:
         """Rooted gather: ``out[root]`` is the list of every rank's
         contribution; non-root ranks receive ``None`` (MPI_Gather semantics).
 
         Wire pricing: the root's own contribution never leaves the node, so
-        only ``(P-1)/P`` of the payload is charged.
+        only ``(P-1)/P`` of the payload is charged; the event stores the
+        exact wire total (``bytes_per_rank`` is a ceil-divided share).
         """
         self._check_world(xs)
         self._check_rank(root)
         wire = sum(_nbytes(x) for r, x in enumerate(xs) if r != root)
-        self._record(CollectiveKind.GATHER, -(-wire // self.world_size))
+        self._record(
+            CollectiveKind.GATHER, -(-wire // self.world_size),
+            algorithm=algorithm, wire_total=wire,
+        )
         gathered = [np.asarray(x).copy() for x in xs]
         return [gathered if r == root else None for r in range(self.world_size)]
 
-    def scatter(self, chunks: Sequence[np.ndarray], root: int = 0) -> list[np.ndarray]:
+    def scatter(
+        self, chunks: Sequence[np.ndarray], root: int = 0,
+        algorithm: str | None = None,
+    ) -> list[np.ndarray]:
         """Rooted scatter: rank ``r`` receives only ``chunks[r]``; the root's
-        chunk stays local, so ``(P-1)/P`` of the payload is charged."""
+        chunk stays local, so ``(P-1)/P`` of the payload is charged (exact
+        wire total stored on the event)."""
         self._check_world(chunks)
         self._check_rank(root)
         wire = sum(_nbytes(x) for r, x in enumerate(chunks) if r != root)
-        self._record(CollectiveKind.SCATTER, -(-wire // self.world_size))
+        self._record(
+            CollectiveKind.SCATTER, -(-wire // self.world_size),
+            algorithm=algorithm, wire_total=wire,
+        )
         return [np.asarray(x).copy() for x in chunks]
 
-    def send(self, x: np.ndarray, dst: int) -> None:
+    def send(self, x: np.ndarray, dst: int, algorithm: str | None = None) -> None:
         self._check_rank(dst)
-        self._record(CollectiveKind.P2P, _nbytes(x))
+        self._record(CollectiveKind.P2P, _nbytes(x), algorithm=algorithm)
 
     # -- non-blocking surface (paper §VI: "our design called for non-blocking
     #    I/O"); simulation completes eagerly but preserves the handle protocol.

@@ -157,8 +157,16 @@ def collective_time(
     kind: str,
     world: int,
     bytes_per_rank: int,
+    algorithm: str | None = None,
 ) -> float:
     """Time for one collective under the channel model.
+
+    ``algorithm=None`` (default) prices the *calibrated fixed schedule* — the
+    one the paper's FMI actually ran and that Figs 12/13 were measured on:
+    binomial tree for reductions, pairwise exchange for alltoall, monolithic
+    PUT/GET for staged channels.  ``algorithm="auto"`` asks the tuned engine
+    (``repro.core.algorithms``) for the min-modeled-time schedule; any other
+    string prices that named schedule explicitly.
 
     direct:  tree/ring algorithms — latency term scales with log2(P) rounds
              (binomial tree, paper Fig 13), bandwidth term with the per-link
@@ -170,6 +178,12 @@ def collective_time(
     """
     if world <= 1:
         return 0.0
+    if algorithm is not None and algorithm != "fixed":
+        from repro.core import algorithms  # deferred: algorithms imports netsim
+
+        if algorithm == "auto":
+            return algorithms.tuned_time(channel, kind, world, bytes_per_rank)
+        return algorithms.algorithm_time(channel, kind, world, bytes_per_rank, algorithm)
     rounds = max(1, math.ceil(math.log2(world)))
     total_bytes = bytes_per_rank * world
 
@@ -196,7 +210,14 @@ def collective_time(
     alpha_eff = channel.alpha_s * (1.0 + world / 64.0)
     if kind == "barrier":
         return rounds * alpha_eff
-    if kind in ("allreduce", "reduce_scatter", "allgather", "allgatherv", "bcast"):
+    if kind == "reduce_scatter":
+        # ONE phase (the reduce half of an allreduce) moving (P-1)/P of the
+        # payload — pricing it as a full ALLREDUCE-class event double-charged
+        # every reduce-scatter + allgather decomposition
+        return rounds * alpha_eff + (
+            (world - 1) / world
+        ) * bytes_per_rank * channel.beta_s_per_byte
+    if kind in ("allreduce", "allgather", "allgatherv", "bcast"):
         # tree: reduce + broadcast phases of log2(P) hops each, plus ~2x data
         # over the slowest link share (Fig 12: 13 ms @32, flat in size)
         return 2.0 * rounds * alpha_eff + 2.0 * bytes_per_rank * channel.beta_s_per_byte

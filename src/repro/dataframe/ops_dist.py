@@ -47,7 +47,8 @@ from repro.dist import compression
 
 
 def _shuffle_sim(
-    tables: list[Table], key: str, comm: Communicator, compress: bool = False
+    tables: list[Table], key: str, comm: Communicator, compress: bool = False,
+    algorithm: str | None = None,
 ) -> list[Table]:
     """Hash-shuffle each rank's table so rows land at hash(key) % P.
 
@@ -62,7 +63,7 @@ def _shuffle_sim(
     p = comm.world_size
     names = sorted(tables[0].columns)
     if compress:
-        return _shuffle_sim_compressed(tables, key, comm, names)
+        return _shuffle_sim_compressed(tables, key, comm, names, algorithm=algorithm)
     sends: list[list[np.ndarray]] = []
     for t in tables:
         payload, counts = build_partition_payload(t, p, [key])
@@ -75,7 +76,7 @@ def _shuffle_sim(
                 else np.zeros((0, len(names)))
             )
         sends.append(row_mats)
-    recvs, _ = comm.alltoallv(sends)
+    recvs, _ = comm.alltoallv(sends, algorithm=algorithm)
     out: list[Table] = []
     for dst in range(p):
         rows = np.concatenate(recvs[dst], axis=0) if recvs[dst] else np.zeros((0, len(names)))
@@ -89,7 +90,8 @@ def _shuffle_sim(
 
 
 def _shuffle_sim_compressed(
-    tables: list[Table], key: str, comm: Communicator, names: list[str]
+    tables: list[Table], key: str, comm: Communicator, names: list[str],
+    algorithm: str | None = None,
 ) -> list[Table]:
     """Codec-per-block variant of :func:`_shuffle_sim` (same row routing)."""
     p = comm.world_size
@@ -103,7 +105,7 @@ def _shuffle_sim_compressed(
             cols = {n: np.asarray(payload[n][d][:c]) for n in names}
             row.append(compression.encode_block(cols, {key}))
         sends.append(row)
-    recvs = comm.compressed_alltoallv(sends)
+    recvs = comm.compressed_alltoallv(sends, algorithm=algorithm)
     out: list[Table] = []
     for dst in range(p):
         decoded = [compression.decode_block(b) for b in recvs[dst]]
@@ -119,12 +121,16 @@ def _shuffle_sim_compressed(
 
 def sim_join(
     left: list[Table], right: list[Table], key: str, comm: Communicator,
-    compress: bool = False,
+    compress: bool = False, algorithm: str | None = None,
 ) -> list[Table]:
-    """Distributed inner join (unique right keys) over the communicator."""
-    l_sh = _shuffle_sim(left, key, comm, compress=compress)
-    r_sh = _shuffle_sim(right, key, comm, compress=compress)
-    comm.barrier()
+    """Distributed inner join (unique right keys) over the communicator.
+
+    ``algorithm`` picks the collective schedule for every priced exchange
+    (None -> the communicator's default, normally the tuned engine).
+    """
+    l_sh = _shuffle_sim(left, key, comm, compress=compress, algorithm=algorithm)
+    r_sh = _shuffle_sim(right, key, comm, compress=compress, algorithm=algorithm)
+    comm.barrier(algorithm=algorithm)
     return [ops_local.join_unique(l, r, key) for l, r in zip(l_sh, r_sh)]
 
 
@@ -135,6 +141,7 @@ def sim_groupby(
     comm: Communicator,
     combine: bool = True,
     compress: bool = False,
+    algorithm: str | None = None,
 ) -> list[Table]:
     """Distributed groupby; `combine` applies local pre-aggregation first."""
     work = tables
@@ -143,8 +150,8 @@ def sim_groupby(
         work = [_rename_back(ops_local.groupby_agg(t, key, aggs), aggs) for t in tables]
         # re-aggregating partials: sum-of-sums, max-of-maxes, sum-of-counts
         final_aggs = {c: ("sum" if op == "count" else op) for c, op in aggs.items()}
-    shuffled = _shuffle_sim(work, key, comm, compress=compress)
-    comm.barrier()
+    shuffled = _shuffle_sim(work, key, comm, compress=compress, algorithm=algorithm)
+    comm.barrier(algorithm=algorithm)
     out = [ops_local.groupby_agg(t, key, final_aggs) for t in shuffled]
     if combine:
         out = [_restore_names(t, aggs, final_aggs) for t in out]

@@ -91,11 +91,37 @@ def train(
     )
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     opt_state = opt.init_state(params, opt_cfg)
+
+    # Explicit compressed dp-reduction (ROADMAP item): when the flag is set
+    # and >1 local device is available, replace XLA's implicit all-reduce
+    # with the shard_map int8+error-feedback reduction.  Its error-feedback
+    # residual is training state: it joins the checkpoint tree so kill/resume
+    # reproduces the uninterrupted trajectory (a run must resume in the same
+    # mode it was saved in).
+    dp = jax.device_count()
+    use_explicit_dp = cfg.grad_compression and dp > 1 and batch % dp == 0
+    grad_err = None
+    if use_explicit_dp:
+        from repro.train.train_step import make_compressed_dp_train_step
+
+        mesh = jax.make_mesh((dp,), ("data",))
+        step_fn, init_err = make_compressed_dp_train_step(cfg, opt_cfg, mesh)
+        grad_err = init_err(params)
+    else:
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    def ckpt_tree():
+        tree = {"params": params, "opt": opt_state}
+        if use_explicit_dp:
+            tree["grad_err"] = grad_err
+        return tree
+
     start = 0
     if resume and ckpt_dir and (latest := ckpt.latest(ckpt_dir)):
-        tree = {"params": params, "opt": opt_state}
-        tree = ckpt.restore(latest, tree)
+        tree = ckpt.restore(latest, ckpt_tree())
         params, opt_state = tree["params"], tree["opt"]
+        if use_explicit_dp:
+            grad_err = tree["grad_err"]
         start = ckpt.read_manifest(latest)["step"]
         log(f"resumed from step {start}")
 
@@ -104,8 +130,24 @@ def train(
         log(f"grad compression: int8+scales {rep['compressed_bytes']/2**20:.1f} MiB "
             f"vs bf16 {rep['bf16_bytes']/2**20:.1f} MiB "
             f"({rep['ratio_vs_bf16']:.2f}x) per exchange")
+        # tuned-engine dp-reduction model (vs the implicit f32 all-reduce the
+        # XLA path would issue), Lambda-direct at the paper's 64-node point
+        from repro.core import algorithms, netsim
 
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+        implicit = algorithms.select_algorithm(
+            "allreduce", 64, 4 * rep["elements"], netsim.LAMBDA_DIRECT)
+        explicit = algorithms.select_algorithm(
+            "allgather", 64, rep["compressed_bytes"], netsim.LAMBDA_DIRECT)
+        why_off = (
+            "" if use_explicit_dp
+            else " (single device)" if dp == 1
+            else f" (batch {batch} not divisible by {dp} devices)"
+        )
+        log(f"dp-reduction model @64/lambda-direct: implicit f32 all-reduce "
+            f"{implicit.time_s*1e3:.1f} ms ({implicit.algorithm}) vs explicit "
+            f"int8 allgather {explicit.time_s*1e3:.1f} ms ({explicit.algorithm}); "
+            f"explicit path {'ON' if use_explicit_dp else 'off' + why_off}")
+
     # start the iterator at the global step so a resumed run consumes the
     # same data slices an uninterrupted run would (loss-trace continuity)
     it = data_iter(cfg, batch, seq_len, start=start)
@@ -114,7 +156,11 @@ def train(
     end = steps if stop_after is None else min(steps, stop_after)
     for step in range(start, end):
         batch_data = next(it)
-        params, opt_state, metrics = step_fn(params, opt_state, batch_data)
+        if use_explicit_dp:
+            params, opt_state, grad_err, metrics = step_fn(
+                params, opt_state, grad_err, batch_data)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch_data)
         losses.append(float(metrics["loss"]))
         # `end - 1`, not `steps - 1`: a --stop-after preemption drill must
         # still log the last step it actually executed
@@ -123,11 +169,11 @@ def train(
                 f"gnorm {float(metrics['grad_norm']):.3f} "
                 f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)")
         if ckpt_dir and (step + 1) % ckpt_every == 0:
-            ckpt.save(ckpt_dir, step + 1, {"params": params, "opt": opt_state})
+            ckpt.save(ckpt_dir, step + 1, ckpt_tree())
     # checkpoint on the way out (graceful preemption / end of run) so a
     # stop_after drill never exits with unsaved progress
     if ckpt_dir and end > start and end % ckpt_every != 0:
-        ckpt.save(ckpt_dir, end, {"params": params, "opt": opt_state})
+        ckpt.save(ckpt_dir, end, ckpt_tree())
     return params, losses
 
 

@@ -127,6 +127,148 @@ class TestDataframeSPMD:
         )
 
 
+class TestCollectiveLowerings:
+    def test_allreduce_decomposed_matches_psum(self):
+        """Rabenseifner lowering (reduce_scatter + all_gather) == psum/pmean,
+        including shapes that don't divide the axis (padded)."""
+        run_spmd(
+            """
+            from repro.core.backends import direct
+            mesh = jax.make_mesh((8,), ("data",))
+            rng = np.random.default_rng(2)
+            for shape in ((64,), (3, 5), (13,)):
+                x_all = jnp.asarray(rng.normal(size=(8,) + shape), jnp.float32)
+
+                def body(x):
+                    x = x[0]
+                    return (direct.allreduce_decomposed(x, "data")[None],
+                            direct.allreduce_decomposed(x, "data", mean=True)[None],
+                            jax.lax.psum(x, "data")[None])
+
+                f = jax.jit(jax.shard_map(body, mesh=mesh,
+                    in_specs=(P("data"),), out_specs=(P("data"),)*3))
+                dec, dec_mean, ps = map(np.asarray, f(x_all))
+                np.testing.assert_allclose(dec[0], ps[0], rtol=1e-6, atol=1e-6)
+                np.testing.assert_allclose(dec_mean[0], ps[0] / 8, rtol=1e-6, atol=1e-6)
+                np.testing.assert_allclose(dec, np.broadcast_to(dec[:1], dec.shape))
+            print("DECOMPOSED_OK")
+            """
+        )
+
+    def test_staged_chunked_matches_monolithic(self):
+        """Chunked pipelined staging moves identical data to the monolithic
+        PUT/GET hop (the time difference lives in the cost engine)."""
+        run_spmd(
+            """
+            from repro.core.backends import mediated
+            mesh = jax.make_mesh((8,), ("data",))
+            rng = np.random.default_rng(3)
+            x_all = jnp.asarray(rng.normal(size=(8, 8, 16, 4)), jnp.float32)
+
+            def body(chunks):
+                def f(x):
+                    x = x[0]
+                    mono = mediated.staged_all_to_all(x, "data")
+                    chk = mediated.staged_all_to_all_chunked(x, "data", chunks=chunks)
+                    return mono[None], chk[None]
+                return f
+
+            for chunks in (2, 4):
+                f = jax.jit(jax.shard_map(body(chunks), mesh=mesh,
+                    in_specs=(P("data"),), out_specs=(P("data"),)*2))
+                mono, chk = map(np.asarray, f(x_all))
+                np.testing.assert_array_equal(mono, chk)
+            print("CHUNKED_OK")
+            """
+        )
+
+
+class TestCompressedDPStep:
+    def test_explicit_reduction_tracks_implicit(self):
+        """make_compressed_dp_train_step (explicit shard_map int8 dp-reduction)
+        stays within quantization error of the implicit-XLA-all-reduce step:
+        identical loss at step 0, close params after three updates."""
+        run_spmd(
+            """
+            import dataclasses
+            from repro import configs
+            from repro.models import api
+            from repro.train import optimizer as opt
+            from repro.train.train_step import (
+                make_compressed_dp_train_step, make_train_step)
+
+            cfg = configs.get('gemma3-4b').reduced(
+                vocab_size=512, d_model=128, num_heads=4, head_dim=32,
+                num_kv_heads=2)
+            cfg = dataclasses.replace(cfg, grad_compression=True)
+            opt_cfg = opt.OptConfig(lr=1e-2, warmup_steps=2, total_steps=8,
+                schedule=cfg.schedule, state_dtype=cfg.opt_state_dtype)
+            params = api.init_params(cfg, jax.random.PRNGKey(0))
+            opt_state = opt.init_state(params, opt_cfg)
+            rng = np.random.default_rng(0)
+            batch = {"tokens": jnp.asarray(rng.integers(0, 512, (8, 16)), jnp.int32),
+                     "mask": jnp.ones((8, 16), jnp.float32)}
+
+            mesh = jax.make_mesh((8,), ("data",))
+            step_c, init_err = make_compressed_dp_train_step(cfg, opt_cfg, mesh)
+            err = init_err(params)
+            step_i = jax.jit(make_train_step(cfg, opt_cfg))
+
+            pi, oi = params, opt_state
+            pc, oc = params, opt_state
+            for s in range(3):
+                pi, oi, mi = step_i(pi, oi, batch)
+                pc, oc, err, mc = step_c(pc, oc, err, batch)
+                li, lc = float(mi['loss']), float(mc['loss'])
+                assert abs(li - lc) <= 0.02 * abs(li) + 1e-4, (s, li, lc)
+            diffs = [float(jnp.abs(a - b).max())
+                     for a, b in zip(jax.tree.leaves(pi), jax.tree.leaves(pc))]
+            # AdamW normalizes update magnitude to ~lr, so int8 grad noise can
+            # move any element by O(lr) per step: bound by the 3-step budget
+            assert max(diffs) <= 2 * 3 * 1e-2, max(diffs)
+            # error-feedback residual is alive and bounded
+            enorm = max(float(jnp.abs(e).max()) for e in jax.tree.leaves(err))
+            assert 0 < enorm < 1.0, enorm
+            print("DP_COMPRESSED_OK", max(diffs))
+            """
+        )
+
+    def test_train_driver_gates_on_flag_and_resumes(self):
+        """launch.train engages the explicit dp-reduction when
+        cfg.grad_compression is set and devices are available, logs the
+        tuned-engine implicit-vs-explicit comparison, and — because the
+        error-feedback residual is checkpointed — a kill/resume run
+        reproduces the uninterrupted loss trajectory."""
+        run_spmd(
+            """
+            import dataclasses, tempfile
+            from repro import configs
+            from repro.launch.train import train
+
+            cfg = configs.get('gemma3-4b').reduced(
+                vocab_size=512, d_model=128, num_heads=4, head_dim=32,
+                num_kv_heads=2)
+            cfg = dataclasses.replace(cfg, grad_compression=True)
+            lines = []
+            _, full = train(cfg, steps=4, batch=8, seq_len=16,
+                            log=lines.append)
+            assert len(full) == 4 and all(np.isfinite(full))
+            joined = "\\n".join(lines)
+            assert "explicit path ON" in joined, joined
+            assert "dp-reduction model" in joined
+
+            with tempfile.TemporaryDirectory() as d:
+                train(cfg, steps=4, batch=8, seq_len=16, ckpt_dir=d,
+                      ckpt_every=2, stop_after=2, log=lambda *_: None)
+                _, resumed = train(cfg, steps=4, batch=8, seq_len=16,
+                                   ckpt_dir=d, resume=True,
+                                   log=lambda *_: None)
+            np.testing.assert_allclose(resumed, full[2:], rtol=1e-6)
+            print("TRAIN_DP_OK", full[-1])
+            """
+        )
+
+
 class TestMoESPMD:
     def test_ep_dispatch_matches_local(self):
         """Expert-parallel all_to_all dispatch == single-device dispatch."""
