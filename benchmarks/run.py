@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   roofline           §Roofline table from the dry-run artifacts
   ckpt_store         checkpoint store: local vs s3-priced, full vs ranged restore
   collective_algos   tuned algorithm selection vs fixed schedules (engine sweep)
+  hybrid_links       link-aware pricing vs hole-punch-failed pair fraction
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ def main() -> None:
         comm_substrates,
         cost_analysis,
         groupby_scaling,
+        hybrid_links,
         local_ops,
         roofline,
         scaling_join,
@@ -45,6 +47,7 @@ def main() -> None:
         ("roofline", roofline),
         ("ckpt_store", ckpt_store),
         ("collective_algos", collective_algos),
+        ("hybrid_links", hybrid_links),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -1,13 +1,26 @@
-"""Core: the paper's contribution — serverless communicator, BSP runtime,
-NAT-traversal control plane, network/cost models."""
+"""Core: the paper's contribution — serverless communicator, comm sessions
+(bootstrap lifecycle + per-pair links), BSP runtime, NAT-traversal control
+plane, network/cost models."""
 
 from repro.core.algorithms import (  # noqa: F401
     Choice,
     DecisionCache,
+    GroupLinks,
     algorithm_time,
     algorithms_for,
+    hybrid_algorithm_time,
     select_algorithm,
+    select_hybrid,
     tuned_time,
+)
+from repro.core.session import (  # noqa: F401
+    FABRICS,
+    CommSession,
+    Fabric,
+    Link,
+    LinkMap,
+    hybrid_session,
+    mediated_bootstrap_time,
 )
 from repro.core.communicator import (  # noqa: F401
     CollectiveKind,

@@ -58,6 +58,25 @@ memoized per exact (kind, world, nbytes, channel) in a :class:`DecisionCache`
 — real event streams (BSP supersteps, shuffle rounds) re-price the same few
 sizes millions of times — so the cached answer is always the true argmin and
 "auto" can never price above a fixed schedule at the same point.
+
+Heterogeneous per-pair links (``GroupLinks``)
+---------------------------------------------
+When a session's bootstrap could not hole-punch every pair (symmetric NAT /
+partition — paper Fig 5) the surviving topology is *hybrid*: most pairs
+direct, some relayed through a store.  ``hybrid_algorithm_time`` prices a
+schedule round by round against that topology: each algorithm has a known
+round structure (which pairs talk in round l), a round's time is the
+**slowest participating link** — direct pairs pay the usual
+``alpha_eff + bytes*beta``, relayed pairs pay PUT+GET through their store
+with all of a round's relayed bytes *serialized at that store's NIC* (the
+same no-1/P bottleneck the staged channels model).  ``select_hybrid`` is
+the autotuner over that model: schedules whose rounds avoid the relayed
+pairs price at their all-direct cost, so the engine literally routes around
+damage (a binomial tree never touches an off-tree relayed pair; a ring hits
+an adjacent one every round).  A full-relay fallback — run the whole
+collective through the fabric's store — is always a candidate, and when NO
+direct pair exists it is the only one: a topology with zero punched links
+is store-mediated, period, and prices exactly as the staged engine.
 """
 
 from __future__ import annotations
@@ -323,3 +342,240 @@ def _choice_for(name, channel, kind, world, nbytes) -> Choice:
 def tuned_time(channel: netsim.ChannelModel, kind: str, world: int, nbytes: int) -> float:
     """Min modeled time across schedules (the autotuned pricing path)."""
     return select_algorithm(kind, world, nbytes, channel).time_s
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-pair links: hybrid (direct + relayed) pricing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupLinks:
+    """A communicator group's link topology, relabeled to local ranks.
+
+    ``relayed`` holds (i, j, store_channel) triples with i < j local ranks —
+    pairs whose hole punch failed and whose traffic relays through a store
+    (possibly a different store per pair).  ``fallback`` is the fabric's
+    relay channel, used when routing the *whole* collective through one
+    store.  Hashable, so hybrid decisions memoize like direct ones.
+    """
+
+    world: int
+    direct: netsim.ChannelModel
+    relayed: tuple = ()
+    fallback: netsim.ChannelModel = netsim.REDIS_STAGED
+
+    @property
+    def all_direct(self) -> bool:
+        return not self.relayed
+
+    @property
+    def fully_relayed(self) -> bool:
+        return self.world > 1 and len(self.relayed) == self.world * (self.world - 1) // 2
+
+    @property
+    def relay_names(self) -> str:
+        return ",".join(sorted({ch.name for (_, _, ch) in self.relayed}))
+
+    def relays_touching(self, rank: int) -> list:
+        return [ch for (i, j, ch) in self.relayed if rank in (i, j)]
+
+
+# Round structure per (kind-class, algorithm): (pair shape, number of rounds,
+# total bandwidth factor).  Per-round bytes = factor * n / rounds, so the
+# homogeneous sum over rounds reproduces the closed forms in _DIRECT_COSTS
+# (latency coefficient == round count for every entry, checked in tests).
+_HYBRID_STRUCTURE: dict[str, dict[str, tuple]] = {
+    "barrier": {
+        "binomial_tree": ("binomial", lambda p, r: r, lambda p, r: 0.0),
+        "flat": ("flat_fan", lambda p, r: 2 * (p - 1), lambda p, r: 0.0),
+    },
+    "allreduce": {
+        "flat": ("flat_fan", lambda p, r: 2 * (p - 1), lambda p, r: 2.0 * (p - 1)),
+        "binomial_tree": ("binomial", lambda p, r: 2 * r, lambda p, r: 2.0 * r),
+        "ring": ("ring", lambda p, r: 2 * (p - 1), lambda p, r: 2.0 * (p - 1) / p),
+        "recursive_doubling": ("xor", lambda p, r: r, lambda p, r: float(r)),
+        "rabenseifner": ("xor", lambda p, r: 2 * r, lambda p, r: 2.0 * (p - 1) / p),
+    },
+    "reduce_scatter": {
+        "flat": ("flat_fan", lambda p, r: p - 1, lambda p, r: float(p - 1)),
+        "binomial_tree": ("binomial", lambda p, r: r, lambda p, r: float(r)),
+        "ring": ("ring", lambda p, r: p - 1, lambda p, r: (p - 1) / p),
+        "recursive_halving": ("xor", lambda p, r: r, lambda p, r: (p - 1) / p),
+    },
+    "allgather": {
+        "flat": ("flat_fan", lambda p, r: p - 1, lambda p, r: float(p - 1)),
+        "ring": ("ring", lambda p, r: p - 1, lambda p, r: float(p - 1)),
+        "recursive_doubling": ("xor", lambda p, r: r, lambda p, r: float(p - 1)),
+    },
+    "bcast": {
+        "flat": ("flat_fan", lambda p, r: p - 1, lambda p, r: float(p - 1)),
+        "binomial_tree": ("binomial", lambda p, r: r, lambda p, r: float(r)),
+        "scatter_allgather": ("binomial", lambda p, r: r, lambda p, r: 2.0 * (p - 1) / p),
+    },
+    "alltoall": {
+        "pairwise": ("pairwise", lambda p, r: p - 1, lambda p, r: 2.0 * (p - 1) / p),
+        "bruck": ("bruck", lambda p, r: r, lambda p, r: float(r)),
+    },
+    "rooted": {
+        "linear": ("rooted_fan", lambda p, r: 1, lambda p, r: 1.0),
+        "binomial_tree": ("binomial", lambda p, r: r, lambda p, r: 1.0),
+    },
+    "p2p": {
+        "direct": ("p2p", lambda p, r: 1, lambda p, r: 1.0),
+    },
+}
+
+# the calibrated paper schedule's shape per kind-class — what algorithm="fixed"
+# prices when the group has relayed links (all-direct "fixed" keeps the exact
+# netsim.collective_time closed form for calibration compatibility)
+FIXED_SHAPES = {
+    "barrier": "binomial_tree",
+    "allreduce": "binomial_tree",
+    "reduce_scatter": "binomial_tree",
+    "allgather": "ring",
+    "bcast": "binomial_tree",
+    "alltoall": "pairwise",
+    "rooted": "linear",
+    "p2p": "direct",
+}
+
+
+def fixed_shape(kind: str) -> str:
+    """Calibrated schedule shape for one collective kind."""
+    return FIXED_SHAPES[_KIND_CLASS[kind]]
+
+
+def _round_pairs(shape: str, idx: int, world: int, r: int) -> tuple:
+    """Local-rank pairs communicating in round ``idx`` of a schedule shape."""
+    if shape == "flat_fan":
+        return ((0, 1 + idx % (world - 1)),)
+    if shape == "rooted_fan":
+        return tuple((0, j) for j in range(1, world))
+    if shape == "binomial":
+        stride = 1 << (idx % r)
+        return tuple(
+            (a, a + stride)
+            for a in range(world)
+            if (a // stride) % 2 == 0 and a + stride < world
+        )
+    if shape == "xor":
+        stride = 1 << (idx % r)
+        return tuple(
+            (i, i ^ stride) for i in range(world) if i < (i ^ stride) < world
+        )
+    if shape == "ring":
+        return tuple(sorted({
+            tuple(sorted((i, (i + 1) % world))) for i in range(world)
+        }))
+    if shape == "pairwise":
+        k = 1 + idx % (world - 1)
+        return tuple(sorted({
+            tuple(sorted((i, (i + k) % world))) for i in range(world)
+            if i != (i + k) % world
+        }))
+    if shape == "bruck":
+        stride = (1 << (idx % r)) % world
+        if stride == 0:
+            return ()
+        return tuple(sorted({
+            tuple(sorted((i, (i + stride) % world))) for i in range(world)
+        }))
+    if shape == "p2p":
+        return ((0, 1),) if world > 1 else ()
+    raise ValueError(f"unknown round shape {shape!r}")
+
+
+def hybrid_algorithm_time(
+    links: GroupLinks, kind: str, nbytes: int, algorithm: str
+) -> float:
+    """Seconds for one schedule over a heterogeneous link topology.
+
+    Round time = max over participating links: direct pairs share the round
+    concurrently at ``alpha_eff + b*beta``; each store serializes its relayed
+    pairs' bytes (PUT+GET, no 1/P) — so one relayed pair in a round gates it
+    at the relay's price, and schedules that avoid relayed pairs price
+    all-direct.  With zero relayed pairs this defers to ``algorithm_time``
+    (bit-identical to the homogeneous engine).
+    """
+    world = links.world
+    if world <= 1:
+        return 0.0
+    if links.all_direct:
+        return algorithm_time(links.direct, kind, world, nbytes, algorithm)
+    klass = _KIND_CLASS[kind]
+    try:
+        shape, nrounds_fn, coeff_fn = _HYBRID_STRUCTURE[klass][algorithm]
+    except KeyError:
+        raise ValueError(
+            f"unknown hybrid algorithm {algorithm!r} for kind {kind!r} "
+            f"(options: {tuple(_HYBRID_STRUCTURE[klass])})"
+        ) from None
+    r = _rounds(world)
+    nrounds = int(nrounds_fn(world, r))
+    b_round = coeff_fn(world, r) * nbytes / max(nrounds, 1)
+    a_eff = _alpha_eff(links.direct, world)
+    beta = links.direct.beta_s_per_byte
+    relay_of = {(i, j): ch for (i, j, ch) in links.relayed}
+    total = 0.0
+    for idx in range(nrounds):
+        pairs = _round_pairs(shape, idx, world, r)
+        relay_bytes: dict[netsim.ChannelModel, float] = {}
+        direct_active = not pairs  # a pure-latency round still pays alpha
+        for pair in pairs:
+            ch = relay_of.get(pair)
+            if ch is None:
+                direct_active = True
+            else:
+                relay_bytes[ch] = relay_bytes.get(ch, 0.0) + b_round
+        t = a_eff + b_round * beta if direct_active else 0.0
+        for ch, tot in relay_bytes.items():
+            t_relay = (2.0 * (ch.alpha_s + ch.store_alpha_s)
+                       + 2.0 * tot * ch.beta_s_per_byte)
+            t = max(t, t_relay)
+        total += t
+    return total
+
+
+_HYBRID_CACHE: dict[tuple, Choice] = {}
+_HYBRID_CACHE_MAX = 1 << 14
+
+
+def select_hybrid(
+    kind: str, world: int, nbytes: int, links: GroupLinks, use_cache: bool = True
+) -> Choice:
+    """Autotuner over a heterogeneous link topology.
+
+    Candidates: every direct schedule priced round-by-round against the
+    link map (schedules that dodge the relayed pairs win), plus routing the
+    whole collective through the fallback store ("<staged>@relay").  With no
+    direct pair left the store route is the only physical one, so the
+    result equals the pure-mediated staged price — never below it.
+    """
+    if world <= 1:
+        return Choice("none", 0.0)
+    if links.world != world:
+        raise ValueError(f"links built for world {links.world}, got {world}")
+    if links.all_direct:
+        return select_algorithm(kind, world, nbytes, links.direct)
+    nbytes = int(nbytes)
+    klass = _KIND_CLASS[kind]
+    if links.fully_relayed:
+        c = select_algorithm(kind, world, nbytes, links.fallback, cache=None)
+        return Choice(f"{c.algorithm}@relay", c.time_s, c.chunks)
+    key = (kind, world, nbytes, links)
+    if use_cache and key in _HYBRID_CACHE:
+        return _HYBRID_CACHE[key]
+    best: Choice | None = None
+    for name in _HYBRID_STRUCTURE[klass]:
+        t = hybrid_algorithm_time(links, kind, nbytes, name)
+        if best is None or t < best.time_s:
+            best = Choice(f"{name}+relay", t)
+    fb = select_algorithm(kind, world, nbytes, links.fallback, cache=None)
+    if fb.time_s < best.time_s:
+        best = Choice(f"{fb.algorithm}@relay", fb.time_s, fb.chunks)
+    if use_cache:
+        if len(_HYBRID_CACHE) >= _HYBRID_CACHE_MAX:
+            _HYBRID_CACHE.clear()
+        _HYBRID_CACHE[key] = best
+    return best

@@ -15,6 +15,11 @@ Two roles:
    payload/P per link.  This is the HLO-level rendition of the paper's
    10-100x result and is used by the roofline/substrate analysis, never by
    production paths.
+
+3. **Relay fallback** (`hybrid_communicator`): the store is also the paper's
+   Fig 5 escape hatch for pairs that cannot hole-punch — one call builds a
+   session-bootstrapped communicator whose blocked pairs relay through
+   redis/s3 while every other pair stays direct, priced link-aware.
 """
 
 from __future__ import annotations
@@ -24,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import netsim
+from repro.core import session as _session
 from repro.core.communicator import Communicator
 
 
@@ -33,6 +39,21 @@ def redis_communicator(world_size: int) -> Communicator:
 
 def s3_communicator(world_size: int) -> Communicator:
     return Communicator(world_size, netsim.S3_STAGED)
+
+
+def hybrid_communicator(
+    world_size: int,
+    blocked_pairs=(),
+    *,
+    relay: str = "redis",
+    platform: netsim.PlatformModel = netsim.LAMBDA_10GB,
+) -> Communicator:
+    """Bootstrapped communicator in which ``blocked_pairs`` failed hole
+    punching and fall back to the mediated ``relay`` channel (paper Fig 5's
+    rendezvous -> punch -> storage-fallback lifecycle in one call)."""
+    return _session.hybrid_session(
+        world_size, blocked_pairs, relay=relay, platform=platform
+    ).communicator()
 
 
 # ---------------------------------------------------------------------------

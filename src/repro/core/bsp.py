@@ -34,6 +34,7 @@ from pathlib import Path
 from typing import Any, Callable, Sequence
 
 from repro.core import netsim
+from repro.core import session as _session
 from repro.core.communicator import Communicator
 
 # module reference only (attributes resolved at call time): repro.dist pulls
@@ -57,10 +58,11 @@ class SuperstepReport:
     comm_s: float             # modeled communication time
     retries: int              # rank re-executions (stragglers / failures)
     barrier_s: float
+    rebootstrap_s: float = 0.0  # deadline-killed ranks re-joining the session
 
     @property
     def total_s(self) -> float:
-        return self.compute_s + self.comm_s + self.barrier_s
+        return self.compute_s + self.comm_s + self.barrier_s + self.rebootstrap_s
 
 
 @dataclasses.dataclass
@@ -86,16 +88,36 @@ class BSPRuntime:
         deadline_s: float | None = None,
         cpu_scale: float = 1.0,
         algorithm: str = "auto",
+        session: _session.CommSession | None = None,
     ):
         self.world = int(world_size)
         self.platform = platform
         channel = (
             netsim.CHANNELS[channel_env] if channel_env else platform.channel
         )
+        # The runtime owns a CommSession: bootstrap (rendezvous + hole punch,
+        # or store rendezvous for mediated channels) is priced as BOOTSTRAP
+        # events in the session log instead of the old side-channel
+        # PlatformModel.init_time call; RunReport.init_s is their sum.  Pass
+        # `session` to run over a pre-bootstrapped (possibly hybrid-link)
+        # topology — collectives then price link-aware automatically.
+        if session is None:
+            session = _session.CommSession.bootstrap(
+                self.world, _session.Fabric(platform=platform, direct=channel)
+            )
+        else:
+            if session.world != self.world:
+                raise ValueError(
+                    f"session world {session.world} != runtime world {self.world}"
+                )
+            channel = session.direct_channel  # the bootstrapped fabric wins
+        self.session = session
         # algorithm: collective schedule policy for every priced exchange —
         # "auto" (tuned engine) or "fixed" (calibrated paper schedule)
         self.algorithm = algorithm
-        self.comm = Communicator(self.world, channel, algorithm=algorithm)
+        self.comm = Communicator(
+            channel=channel, algorithm=algorithm, session=session
+        )
         # checkpoint_dir: a directory (wrapped in a LocalStore) or any
         # dist.object_store.Store — the same durable-state plane train.py uses
         self.checkpoint_store = (
@@ -178,7 +200,9 @@ class BSPRuntime:
             states = list(resume_from["states"])
             start_step = resume_from["step"] + 1
 
-        init_s = self.platform.init_time(self.world)
+        # priced bootstrap from the session log (sums to the old
+        # PlatformModel.init_time closed form on an all-direct fabric)
+        init_s = self.session.bootstrap_time_s
         reports: list[SuperstepReport] = []
 
         for idx in range(start_step, len(supersteps)):
@@ -186,6 +210,7 @@ class BSPRuntime:
             self.comm.reset_events()
             max_rank_s = 0.0
             retries = 0
+            reboot_s = 0.0
             new_states: list[Any] = [None] * self.world
             for rank in range(self.world):
                 attempt = 0
@@ -216,22 +241,28 @@ class BSPRuntime:
                     ):
                         # straggler mitigation: kill + re-invoke.  The fresh
                         # worker has no injected delay, but the injector stays
-                        # armed for every other rank and superstep.
+                        # armed for every other rank and superstep.  The
+                        # replacement function must re-join the fabric —
+                        # re-rendezvous + re-punch its tree links, priced
+                        # through the session into the shared log.
                         attempt += 1
                         retries += 1
                         deadline_killed = True
+                        reboot_s += self.session.rebootstrap_rank(rank)
                         continue
                     new_states[rank] = out
                     max_rank_s = max(max_rank_s, elapsed)
                     break
             states = new_states
             comm_s = self.comm.comm_time_s
-            barrier_s = netsim.collective_time(
-                self.comm.channel, "barrier", self.world, 0,
-                algorithm=self.algorithm,
-            )
+            # priced through the communicator so a hybrid session's relayed
+            # pairs gate the superstep barrier too (link-aware)
+            barrier_s = self.comm.collective_time_s("barrier", 0)
             reports.append(
-                SuperstepReport(idx, name, max_rank_s, comm_s, retries, barrier_s)
+                SuperstepReport(
+                    idx, name, max_rank_s, comm_s, retries, barrier_s,
+                    rebootstrap_s=reboot_s,
+                )
             )
             self._save(idx, states)
             self._completed_steps = idx + 1

@@ -56,6 +56,34 @@ The paper's Fig 12 observation that AllReduce is *latency-bound* at 32 nodes
 is exactly why recursive doubling halves the modeled time there, and why the
 tuned rows of ``benchmarks/collective_algos.py`` beat the fixed binomial
 tree by >1.3x on large dp reductions.
+
+Link-aware pricing (``repro.core.session``)
+-------------------------------------------
+A communicator belongs to a :class:`~repro.core.session.CommSession` whose
+bootstrap produced a per-pair ``LinkMap``.  When every pair hole-punched,
+the table above applies unchanged.  When some pairs could not be punched
+(symmetric NAT — paper Fig 5) and fell back to a relay store:
+
+    topology        pricing
+    --------------  -------------------------------------------------------
+    hybrid          every schedule is priced round by round at the slowest
+    (some pairs     participating link — relayed pairs PUT+GET through
+    relayed)        their store with the round's relayed bytes serialized
+                    at its NIC; the autotuner prefers schedules whose
+                    rounds avoid the relayed pairs (a binomial tree never
+                    touches an off-tree pair; a ring pays every round for
+                    an adjacent one), falling back to routing the whole
+                    collective through the store ("<staged>@relay") when
+                    that wins.
+    fully relayed   no direct links exist: the staged engine on the relay
+                    channel IS the price (never below pure-mediated).
+
+``CommEvent.relay`` records the relay channel(s) and
+``CommEvent.relayed_pairs`` the failed-pair count, so hybrid rounds stay
+observable per event.  Bootstrap itself lands in the same log as
+``BOOTSTRAP`` events.  Sub-communicators from :meth:`Communicator.split`
+(MPI ``comm_split`` color/key semantics — the dp x mp mesh axes) share the
+parent's link table and event log.
 """
 
 from __future__ import annotations
@@ -68,6 +96,7 @@ import numpy as np
 
 from repro.core import algorithms as _algorithms
 from repro.core import netsim
+from repro.core import session as _session
 
 
 class CollectiveKind(str, enum.Enum):
@@ -82,6 +111,7 @@ class CollectiveKind(str, enum.Enum):
     GATHER = "gather"
     SCATTER = "scatter"
     P2P = "p2p"
+    BOOTSTRAP = "bootstrap"  # session lifecycle: rendezvous / punch / relay
 
 
 @dataclasses.dataclass
@@ -96,7 +126,10 @@ class CommEvent:
     for the calibrated paper schedule).  Rooted collectives whose wire total
     is not a multiple of the world size carry it exactly in ``wire_total``
     (``bytes_per_rank`` is a ceil-divided share, so ``bytes_per_rank * world``
-    would over-report by up to P-1 bytes).
+    would over-report by up to P-1 bytes).  Events priced over a hybrid link
+    topology record the relay channel name(s) in ``relay`` and the number of
+    hole-punch-failed pairs in the group in ``relayed_pairs``; session
+    bootstrap phases land here too (kind ``BOOTSTRAP``).
     """
 
     kind: CollectiveKind
@@ -106,6 +139,8 @@ class CommEvent:
     raw_bytes: int | None = None  # pre-codec payload per rank; None => wire
     algo: str = "fixed"     # schedule chosen by the engine for this event
     wire_total: int | None = None  # exact wire bytes; None => bytes_per_rank*world
+    relay: str | None = None       # relay channel(s) when pairs were relayed
+    relayed_pairs: int = 0         # hole-punch-failed pairs in the group
 
     def __post_init__(self):
         if self.raw_bytes is None:
@@ -140,32 +175,141 @@ class Communicator:
 
     Arguments
     ---------
-    world_size: number of ranks.
+    world_size: number of ranks (omit when ``session`` is given).
     channel:    a :class:`netsim.ChannelModel` (direct / redis / s3) that
-                prices each collective. Defaults to Lambda direct TCP.
+                prices each collective. Defaults to the session's direct
+                channel (Lambda direct TCP for implicit sessions).
     algorithm:  default schedule for every collective — "auto" (tuned
                 engine), "fixed" (calibrated paper schedule), or a named
                 schedule; overridable per call.
+    session:    the :class:`~repro.core.session.CommSession` that owns
+                membership, the per-pair :class:`LinkMap`, and the shared
+                event log.  ``Communicator(world_size=P)`` builds an
+                implicit all-direct session (no bootstrap events), so
+                pre-session code prices bit-identically.
+    group:      global session ranks this communicator spans, in rank order
+                (``split`` builds these); defaults to the whole session.
     """
 
     def __init__(
         self,
-        world_size: int,
+        world_size: int | None = None,
         channel: netsim.ChannelModel | None = None,
         algorithm: str = "auto",
+        *,
+        session: "_session.CommSession | None" = None,
+        group: Sequence[int] | None = None,
     ):
-        if world_size < 1:
-            raise ValueError("world_size must be >= 1")
-        self.world_size = int(world_size)
-        self.channel = channel or netsim.LAMBDA_DIRECT
+        if session is None:
+            if world_size is None:
+                raise ValueError("need world_size or session")
+            if world_size < 1:
+                raise ValueError("world_size must be >= 1")
+            session = _session.CommSession.all_direct(int(world_size), channel)
+        self.session = session
+        self.group: tuple[int, ...] = (
+            tuple(int(g) for g in group) if group is not None
+            else tuple(range(session.world))
+        )
+        for g in self.group:
+            if not (0 <= g < session.world):
+                raise ValueError(f"group rank {g} outside session world {session.world}")
+        if len(set(self.group)) != len(self.group):
+            raise ValueError("group contains duplicate ranks")
+        if world_size is not None and int(world_size) != len(self.group):
+            raise ValueError(
+                f"world_size {world_size} != group size {len(self.group)}"
+            )
+        self.world_size = len(self.group)
+        self.channel = channel or session.direct_channel
         self.algorithm = algorithm
-        self.events: list[CommEvent] = []
+        # shared, session-owned log: bootstrap events + every collective from
+        # this communicator AND its split() sub-communicators
+        self.events: list[CommEvent] = session.events
+        self._links = session.link_map.group_links(self.group)
         # non-blocking handles: id -> (kind, result); popped on wait() so a
         # long BSP run can issue millions of iops without growing this map
         self._pending: dict[int, tuple[str, Any]] = {}
         self._next_handle = 0
 
     # -- accounting ---------------------------------------------------------
+
+    def _price(
+        self,
+        kind: CollectiveKind,
+        bytes_per_rank: int,
+        algorithm: str | None = None,
+        peer: int | None = None,
+    ) -> tuple[str, float, str | None]:
+        """(schedule name, modeled seconds, relay channel name or None) for
+        one collective on this group's link topology — the single pricing
+        path `_record` and external composers (the BSP barrier) share."""
+        algorithm = self.algorithm if algorithm is None else algorithm
+        links = self._links
+        relay_name = None
+        if links.all_direct:
+            if algorithm == "fixed":
+                algo_name = "fixed"
+                t = netsim.collective_time(
+                    self.channel, kind.value, self.world_size, bytes_per_rank
+                )
+            elif algorithm == "auto":
+                choice = _algorithms.select_algorithm(
+                    kind.value, self.world_size, bytes_per_rank, self.channel
+                )
+                algo_name, t = choice.algorithm, choice.time_s
+            else:
+                algo_name = algorithm
+                t = _algorithms.algorithm_time(
+                    self.channel, kind.value, self.world_size, bytes_per_rank, algorithm
+                )
+        elif kind is CollectiveKind.P2P and peer is not None:
+            # endpoint-priced: relayed only if the peer sits behind a failed
+            # punch (we don't model which src is talking, so take the worst
+            # relay touching the peer)
+            chans = links.relays_touching(self._local(peer))
+            if chans:
+                worst = max(
+                    chans, key=lambda c: c.point_to_point_time(int(bytes_per_rank))
+                )
+                t = worst.point_to_point_time(int(bytes_per_rank))
+                algo_name, relay_name = "p2p@relay", worst.name
+            else:
+                t = _algorithms.algorithm_time(
+                    self.channel, "p2p", self.world_size, bytes_per_rank, "direct"
+                )
+                algo_name = "direct"
+        else:
+            # hybrid topology: price round-by-round at the slowest
+            # participating link (see repro.core.algorithms)
+            if algorithm == "auto":
+                choice = _algorithms.select_hybrid(
+                    kind.value, self.world_size, bytes_per_rank, links
+                )
+                algo_name, t = choice.algorithm, choice.time_s
+            else:
+                name = (
+                    _algorithms.fixed_shape(kind.value)
+                    if algorithm == "fixed" else algorithm
+                )
+                t = _algorithms.hybrid_algorithm_time(
+                    links, kind.value, bytes_per_rank, name
+                )
+                algo_name = f"{name}+relay"
+            relay_name = links.relay_names
+        return algo_name, t, relay_name
+
+    def collective_time_s(
+        self,
+        kind: CollectiveKind | str,
+        bytes_per_rank: int = 0,
+        algorithm: str | None = None,
+    ) -> float:
+        """Link-aware modeled seconds for one collective WITHOUT recording an
+        event — for composers that price implicit synchronization (the BSP
+        superstep barrier) outside the log."""
+        kind = CollectiveKind(kind)
+        return self._price(kind, int(bytes_per_rank), algorithm)[1]
 
     def _record(
         self,
@@ -175,35 +319,34 @@ class Communicator:
         *,
         algorithm: str | None = None,
         wire_total: int | None = None,
+        peer: int | None = None,
     ) -> CommEvent:
-        algorithm = self.algorithm if algorithm is None else algorithm
-        if algorithm == "fixed":
-            algo_name = "fixed"
-            t = netsim.collective_time(
-                self.channel, kind.value, self.world_size, bytes_per_rank
-            )
-        elif algorithm == "auto":
-            choice = _algorithms.select_algorithm(
-                kind.value, self.world_size, bytes_per_rank, self.channel
-            )
-            algo_name, t = choice.algorithm, choice.time_s
-        else:
-            algo_name = algorithm
-            t = _algorithms.algorithm_time(
-                self.channel, kind.value, self.world_size, bytes_per_rank, algorithm
-            )
+        algo_name, t, relay_name = self._price(
+            kind, bytes_per_rank, algorithm, peer=peer
+        )
         ev = CommEvent(
             kind, self.world_size, int(bytes_per_rank), t,
             raw_bytes=None if raw_bytes is None else int(raw_bytes),
             algo=algo_name,
             wire_total=None if wire_total is None else int(wire_total),
+            relay=relay_name,
+            relayed_pairs=len(self._links.relayed) if relay_name else 0,
         )
         self.events.append(ev)
         return ev
 
+    def _local(self, rank: int) -> int:
+        """Local index of a local rank (identity; validates range)."""
+        self._check_rank(rank)
+        return int(rank)
+
     @property
     def comm_time_s(self) -> float:
-        return float(sum(e.time_s for e in self.events))
+        """Priced collective time (bootstrap events are accounted separately
+        via ``session.bootstrap_time_s``)."""
+        return float(sum(
+            e.time_s for e in self.events if e.kind != CollectiveKind.BOOTSTRAP
+        ))
 
     @property
     def bytes_on_wire(self) -> int:
@@ -218,7 +361,68 @@ class Communicator:
         return mult * int(sum(e.total_raw_bytes for e in self.events))
 
     def reset_events(self) -> None:
-        self.events.clear()
+        """Clear the session log's collective events (bootstrap history —
+        there is none on implicit sessions — is preserved)."""
+        self.session.reset_events(keep_bootstrap=True)
+
+    # -- sub-groups (MPI_Comm_split) ----------------------------------------
+
+    def split(
+        self,
+        color: Sequence[int | None],
+        key: Sequence[int] | None = None,
+    ) -> list["Communicator | None"]:
+        """MPI ``comm_split``: partition this communicator's ranks by color.
+
+        ``color[r]`` / ``key[r]`` are rank r's values (one entry per local
+        rank — this simulation surface sees the whole world at once, where
+        real MPI ranks each pass one scalar).  Ranks sharing a color form a
+        sub-communicator, ordered by ``(key[r], r)`` exactly as MPI mandates;
+        ``None`` color (MPI_UNDEFINED) yields ``None``.  Returns one entry
+        per local rank; ranks in the same color share the SAME Communicator
+        object, whose ``group`` holds the parent ranks mapped to *global
+        session ranks* — so nested splits compose and the per-pair link
+        table (and the shared event log) follow the sub-group.  This is the
+        ``comm_split`` the dp x mp mesh axes need: split by row color for
+        the dp reduction group, by column color for the mp gather group.
+        """
+        if len(color) != self.world_size:
+            raise ValueError(
+                f"need one color per rank ({self.world_size}), got {len(color)}"
+            )
+        if key is None:
+            key = [0] * self.world_size
+        if len(key) != self.world_size:
+            raise ValueError(
+                f"need one key per rank ({self.world_size}), got {len(key)}"
+            )
+        members: dict[int, list[tuple[int, int]]] = {}
+        for r in range(self.world_size):
+            if color[r] is None:
+                continue
+            members.setdefault(int(color[r]), []).append((int(key[r]), r))
+        subs: dict[int, Communicator] = {}
+        for c, ranked in members.items():
+            ranked.sort()  # MPI: order by key, ties by parent rank
+            subs[c] = Communicator(
+                channel=self.channel,
+                algorithm=self.algorithm,
+                session=self.session,
+                group=tuple(self.group[r] for _, r in ranked),
+            )
+        return [
+            subs[int(color[r])] if color[r] is not None else None
+            for r in range(self.world_size)
+        ]
+
+    def local_rank(self, global_rank: int) -> int:
+        """This communicator's rank for a global session rank."""
+        try:
+            return self.group.index(int(global_rank))
+        except ValueError:
+            raise ValueError(
+                f"session rank {global_rank} not in group {self.group}"
+            ) from None
 
     # -- collectives (semantics identical across backends) -------------------
 
@@ -404,7 +608,7 @@ class Communicator:
 
     def send(self, x: np.ndarray, dst: int, algorithm: str | None = None) -> None:
         self._check_rank(dst)
-        self._record(CollectiveKind.P2P, _nbytes(x), algorithm=algorithm)
+        self._record(CollectiveKind.P2P, _nbytes(x), algorithm=algorithm, peer=dst)
 
     # -- non-blocking surface (paper §VI: "our design called for non-blocking
     #    I/O"); simulation completes eagerly but preserves the handle protocol.
@@ -447,7 +651,7 @@ class Communicator:
     def ping(self, peer: int) -> bool:
         """Keepalive to prevent eager socket termination (paper §VI)."""
         self._check_rank(peer)
-        self._record(CollectiveKind.P2P, 1)
+        self._record(CollectiveKind.P2P, 1, peer=peer)
         return True
 
     # -- helpers -------------------------------------------------------------

@@ -108,12 +108,24 @@ def join_cost(
     the phase durations with measured/simulated values for other points.
     """
     from repro.core import netsim
+    from repro.core import session as _session
 
     platform = netsim.LAMBDA_10GB if mem_gb >= 8 else netsim.LAMBDA_6GB
     if init_s is None:
-        # NAT setup applies only to the direct channel; storage channels have
-        # negligible connection setup (paper §IV-E).
-        init_s = platform.init_time(workers) if channel == "direct" else 1.0
+        # Bootstrap is priced through the rendezvous model for EVERY channel
+        # (it used to be a hard-coded 1.0 s for non-direct ones): the direct
+        # channel pays the full NAT-traversal lifecycle (CommSession's priced
+        # BOOTSTRAP events, = the paper's ~31.5 s at 32), storage channels
+        # pay the store-rendezvous (atomic-counter registration + log2-depth
+        # membership polling — milliseconds on redis, ~0.4 s on s3 at 32).
+        if channel == "direct":
+            init_s = _session.CommSession.bootstrap(
+                workers, _session.Fabric(platform=platform)
+            ).bootstrap_time_s
+        else:
+            init_s = _session.mediated_bootstrap_time(
+                netsim.CHANNELS[channel], workers
+            )
     if compute_s is None:
         ch = netsim.CHANNELS[channel]
         # strong-scaling join basis (paper Fig 15/16 cost basis): 4.5M rows,

@@ -7,7 +7,9 @@ relays peer addresses, and the functions then hole-punch direct TCP
 connections following a binomial-tree schedule.  The paper measures this
 init phase at ~31.5 s for 32 workers and notes it "scales linearly with the
 number of tree levels" — `connection_schedule` reproduces exactly that
-structure, and `netsim.PlatformModel.init_time` prices it.
+structure, and `repro.core.session.CommSession.bootstrap` drives this server
+through the full lifecycle, pricing each phase as a BOOTSTRAP event in the
+session log (the closed form remains `netsim.PlatformModel.init_time`).
 
 Also reproduced here, because the paper calls them out as contributions in
 §VI: connection retries on socket failure, rank-ordered locking to kill the
@@ -69,6 +71,21 @@ class RendezvousServer:
         self._nat_table.clear()
         self._locks_held.clear()
         self.cleared = True
+
+    def reassign_rank(self, rank: int, internal_addr: str) -> str:
+        """Re-register a re-invoked worker in its existing slot.
+
+        A deadline-killed rank comes back as a fresh function behind a NEW
+        NAT binding; its stale mapping must be overwritten — the same
+        §III-D stale-metadata hazard ``clear()`` guards between experiments,
+        applied to a single slot mid-run.  Returns the new external address
+        (port bumped past the original range so peers re-punch).
+        """
+        if rank not in self._nat_table:
+            raise KeyError(f"rank {rank} was never assigned; use assign_rank")
+        ext = f"54.0.{rank // 256}.{rank % 256}:{50000 + rank}"
+        self._nat_table[rank] = NatMapping(internal_addr, ext)
+        return ext
 
     def peer_address(self, rank: int) -> str:
         """Relay the hole-punched external address of a peer (Fig 5 step 2)."""

@@ -105,11 +105,14 @@ class PlatformModel:
     sched_jitter_s: float     # per-doubling scheduling overhead (weak-scaling drift)
 
     def init_time(self, world: int) -> float:
-        """Connection-establishment phase.
+        """Connection-establishment phase (closed form).
 
         The paper observes the NAT-traversal init phase "scales linearly with
         the number of tree levels in the binomial connection algorithm"
-        (§IV-E) and measures ~31.5 s at 32 nodes for Lambda.
+        (§IV-E) and measures ~31.5 s at 32 nodes for Lambda.  The BSP runtime
+        and cost model no longer call this directly: ``CommSession.bootstrap``
+        emits the same total as itemized, priced BOOTSTRAP events (rendezvous
+        + one event per punch level) in the session's event log.
         """
         levels = max(0, math.ceil(math.log2(world))) if world > 1 else 0
         return self.init_base_s + levels * self.init_per_level_s

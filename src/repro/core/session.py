@@ -1,0 +1,435 @@
+"""Communication sessions: the connection lifecycle around the collectives.
+
+The paper's primary contribution is not the collectives themselves but the
+*bootstrap* that makes them possible on serverless (§III-D/E, Fig 5):
+rendezvous through a publicly reachable server (atomic-counter rank
+assignment, the Redis INCR pattern), NAT-mapping exchange, binomial-tree
+hole punching — and, when a pair cannot be punched (symmetric NAT, network
+partition), **fallback to mediated storage** so the job still completes.
+:class:`CommSession` owns exactly that lifecycle:
+
+    session = CommSession.bootstrap(world=8, fabric="lambda")
+    comm = session.communicator()          # root communicator over all ranks
+    row, col = comm.split(colors), ...     # MPI_Comm_split sub-groups
+
+``bootstrap`` drives :class:`repro.core.nat.RendezvousServer` through the
+full sequence and prices every phase as :class:`CommEvent`s (kind
+``BOOTSTRAP``) in the session's event log — the same log the collectives
+land in — replacing the old side-channel ``PlatformModel.init_time`` call.
+The sum of the bootstrap events reproduces ``init_time`` exactly for the
+default all-direct scenario (paper Fig 14: ~31.5 s at 32 Lambda workers).
+
+The product of bootstrap is a :class:`LinkMap`: a **per-pair channel
+assignment**.  Pairs that hole-punched get the fabric's direct channel;
+pairs configured as blocked (``Fabric.blocked_pairs`` / ``blocked_ranks``)
+fall back to the fabric's relay channel (redis/s3).  Every collective on a
+communicator whose group contains a relayed pair is priced link-aware by
+``repro.core.algorithms`` (each round at the slowest participating link) and
+its :class:`CommEvent` records the relay.
+
+Re-bootstrap: a deadline-killed / preempted rank re-joins through
+:meth:`CommSession.rebootstrap_rank` — re-registration in its rendezvous
+slot (``RendezvousServer.reassign_rank``; the re-invoked function gets a new
+NAT binding) plus one re-punch per tree level, priced into the same log.
+``BSPRuntime`` calls this on every deadline kill and ``launch/train.py`` on
+``--resume`` after a preemption drill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Iterable
+
+from repro.core import algorithms, nat, netsim
+
+if TYPE_CHECKING:  # circular at runtime: communicator imports session
+    from repro.core.communicator import CommEvent, Communicator
+
+
+# ---------------------------------------------------------------------------
+# Fabric: the bootstrap environment
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Everything ``bootstrap`` needs to know about the world it connects.
+
+    ``platform`` prices the rendezvous lifecycle (per-level punch cost, base
+    startup); ``direct`` is the channel punched pairs use (defaults to the
+    platform's); ``relay`` is the mediated fallback for pairs that cannot be
+    punched.  The NAT scenario is configuration, not chance: ``blocked_pairs``
+    are pair-wise symmetric-NAT / partition cases, ``blocked_ranks`` are
+    workers behind a fully symmetric NAT (every link to them relays).
+    ``punch_fail_prob`` adds *transient* socket failures that succeed on
+    retry (paper §VI), priced into the punch-level events.
+    """
+
+    platform: netsim.PlatformModel = netsim.LAMBDA_10GB
+    direct: netsim.ChannelModel | None = None
+    relay: netsim.ChannelModel = netsim.REDIS_STAGED
+    blocked_pairs: frozenset = frozenset()
+    blocked_ranks: frozenset = frozenset()
+    punch_fail_prob: float = 0.0
+    max_retries: int = 3
+    seed: int = 0
+
+    @property
+    def direct_channel(self) -> netsim.ChannelModel:
+        return self.direct or self.platform.channel
+
+    def blocked_set(self, world: int) -> frozenset:
+        """Normalized (a < b) blocked pairs, expanding blocked ranks."""
+        pairs = set()
+        for p in self.blocked_pairs:
+            a, b = sorted(int(x) for x in p)
+            if a == b or not (0 <= a and b < world):
+                raise ValueError(f"blocked pair {p!r} invalid for world {world}")
+            pairs.add((a, b))
+        for r in self.blocked_ranks:
+            if not (0 <= int(r) < world):
+                raise ValueError(f"blocked rank {r!r} out of range for world {world}")
+            for o in range(world):
+                if o != r:
+                    pairs.add(tuple(sorted((int(r), o))))
+        return frozenset(pairs)
+
+
+FABRICS = {
+    "lambda": Fabric(platform=netsim.LAMBDA_10GB),
+    "lambda-6gb": Fabric(platform=netsim.LAMBDA_6GB),
+    "ec2": Fabric(platform=netsim.EC2_XL),
+    "hpc": Fabric(platform=netsim.RIVANNA_10GB),
+    # store-rendezvous fabrics: no NAT traversal, everything mediated
+    "redis": Fabric(platform=netsim.LAMBDA_10GB, direct=netsim.REDIS_STAGED),
+    "s3": Fabric(platform=netsim.LAMBDA_10GB, direct=netsim.S3_STAGED),
+}
+
+
+def mediated_bootstrap_time(channel: netsim.ChannelModel, world: int) -> float:
+    """Bootstrap through a store rendezvous (no hole punching).
+
+    Each worker INCRs the atomic rank counter, writes its metadata record,
+    reads the peer table, and confirms membership (~4 store round trips,
+    concurrent across workers), then polls a tree-depth's worth of rounds
+    until the full world has registered — the same log2-depth convergence
+    the staged barrier pays.  Replaces the hard-coded 1.0 s the cost model
+    used to charge for non-direct channels.
+    """
+    if world < 1:
+        raise ValueError("world must be >= 1")
+    per_obj = channel.alpha_s + channel.store_alpha_s
+    levels = max(0, math.ceil(math.log2(world))) if world > 1 else 0
+    return 4.0 * per_obj + 2.0 * per_obj * levels
+
+
+# ---------------------------------------------------------------------------
+# LinkMap: per-pair channel assignment
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One pair's transport: the channel it uses and whether it relays."""
+
+    a: int
+    b: int
+    channel: netsim.ChannelModel
+    relayed: bool = False
+
+
+class LinkMap:
+    """World-wide per-pair channel table produced by bootstrap.
+
+    Direct pairs share ``direct``; relayed pairs carry their own (possibly
+    heterogeneous) store channel.  ``fallback`` is the fabric's relay — the
+    store the engine routes *everything* through when no direct link exists.
+    """
+
+    def __init__(
+        self,
+        world: int,
+        direct: netsim.ChannelModel,
+        relays: dict | None = None,
+        fallback: netsim.ChannelModel = netsim.REDIS_STAGED,
+    ):
+        self.world = int(world)
+        self.direct = direct
+        self._relays = {
+            tuple(sorted(p)): ch for p, ch in (relays or {}).items()
+        }
+        self.fallback = fallback
+
+    def link(self, a: int, b: int) -> Link:
+        a, b = sorted((int(a), int(b)))
+        ch = self._relays.get((a, b))
+        if ch is None:
+            return Link(a, b, self.direct, relayed=False)
+        return Link(a, b, ch, relayed=True)
+
+    def is_relayed(self, a: int, b: int) -> bool:
+        return tuple(sorted((int(a), int(b)))) in self._relays
+
+    @property
+    def all_direct(self) -> bool:
+        return not self._relays
+
+    def relayed_pairs(self) -> tuple:
+        return tuple(sorted(self._relays))
+
+    def group_links(self, group: tuple) -> algorithms.GroupLinks:
+        """Link view for a sub-group, relabeled to local ranks.
+
+        ``group[i]`` is the global rank of local rank ``i`` (split order);
+        round schedules in the engine run over local labels, so relayed
+        pairs are translated before pricing.
+        """
+        idx = {int(g): i for i, g in enumerate(group)}
+        relayed = []
+        for (a, b), ch in sorted(self._relays.items()):
+            if a in idx and b in idx:
+                i, j = sorted((idx[a], idx[b]))
+                relayed.append((i, j, ch))
+        return algorithms.GroupLinks(
+            world=len(group),
+            direct=self.direct,
+            relayed=tuple(relayed),
+            fallback=self.fallback,
+        )
+
+
+# ---------------------------------------------------------------------------
+# CommSession
+# ---------------------------------------------------------------------------
+
+
+class CommSession:
+    """Owns membership (rendezvous server), transport (LinkMap), and the
+    priced event log that bootstrap and every collective share."""
+
+    def __init__(
+        self,
+        world: int,
+        link_map: LinkMap,
+        fabric: Fabric | None = None,
+        server: nat.RendezvousServer | None = None,
+        events: list | None = None,
+    ):
+        if world < 1:
+            raise ValueError("world must be >= 1")
+        self.world = int(world)
+        self.link_map = link_map
+        self.fabric = fabric
+        self.server = server
+        self.events: list[CommEvent] = events if events is not None else []
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def all_direct(
+        cls, world: int, channel: netsim.ChannelModel | None = None
+    ) -> "CommSession":
+        """Implicit compatibility session: every pair direct on ``channel``,
+        no bootstrap events — ``Communicator(world_size=P)`` builds one of
+        these, so pre-session code prices bit-identically."""
+        channel = channel or netsim.LAMBDA_DIRECT
+        return cls(world, LinkMap(world, channel))
+
+    @classmethod
+    def bootstrap(
+        cls,
+        world: int,
+        fabric: Fabric | str = "lambda",
+        server: nat.RendezvousServer | None = None,
+    ) -> "CommSession":
+        """Run the full rendezvous lifecycle (paper Fig 5) and price it.
+
+        1. every worker registers: atomic rank assignment + NAT table entry;
+        2. binomial-tree hole-punch schedule, level by level, with transient
+           failures retried (``punch_fail_prob``);
+        3. pairs configured as blocked fail permanently after ``max_retries``
+           and fall back to the fabric's relay channel (mediated storage).
+
+        Every phase lands in the session log as a ``BOOTSTRAP``
+        :class:`CommEvent`; with no blocked pairs and no transient failures
+        their sum equals ``fabric.platform.init_time(world)`` exactly.
+        A staged ``direct`` channel means there is nothing to punch: the
+        whole bootstrap is one store-rendezvous event
+        (:func:`mediated_bootstrap_time`).
+        """
+        import numpy as np
+
+        from repro.core.communicator import CollectiveKind, CommEvent
+
+        if isinstance(fabric, str):
+            try:
+                fabric = FABRICS[fabric]
+            except KeyError:
+                raise ValueError(
+                    f"unknown fabric {fabric!r}; options: {sorted(FABRICS)}"
+                ) from None
+        direct = fabric.direct_channel
+        server = server or nat.RendezvousServer(world)
+        events: list[CommEvent] = []
+
+        # phase 1: atomic rank assignment + NAT table (Fig 5 steps 1-2).
+        # Raises StaleMetadataError on a reused namespace (§III-D).
+        for w in range(world):
+            server.assign_rank(f"10.0.0.{w}")
+
+        if direct.staged:
+            # store rendezvous: membership converges through the store, no
+            # NAT traversal, every link IS the store
+            events.append(CommEvent(
+                CollectiveKind.BOOTSTRAP, world, 0,
+                mediated_bootstrap_time(direct, world), algo="store_rendezvous",
+            ))
+            link_map = LinkMap(world, direct, {}, fabric.relay)
+            return cls(world, link_map, fabric, server, events)
+
+        events.append(CommEvent(
+            CollectiveKind.BOOTSTRAP, world, 0,
+            fabric.platform.init_base_s, algo="rendezvous",
+        ))
+
+        # phase 2: hole punching down the binomial tree, one priced event
+        # per level (the linear-in-levels scaling of the paper's 31.5 s)
+        blocked = fabric.blocked_set(world)
+        rng = np.random.default_rng(fabric.seed)
+        for lvl, level in enumerate(nat.connection_schedule(world)):
+            level_retries = 0
+            for a, b in level:
+                _ = server.peer_address(a), server.peer_address(b)
+                if (a, b) in blocked:
+                    # permanent failure (symmetric NAT): burn every retry
+                    # (priced into this level's event), then fall back below
+                    level_retries += fabric.max_retries
+                    continue
+                while fabric.punch_fail_prob and rng.random() < fabric.punch_fail_prob:
+                    level_retries += 1
+                    if level_retries > 64 * max(1, len(level)):
+                        raise ConnectionError("transient punch failures did not converge")
+            events.append(CommEvent(
+                CollectiveKind.BOOTSTRAP, world, 0,
+                fabric.platform.init_per_level_s + level_retries * direct.alpha_s,
+                algo=f"hole_punch_l{lvl}",
+            ))
+
+        # phase 3: relay fallback for every blocked pair.  Schedule pairs
+        # already burned their retries in their level's event above; what
+        # remains is each blocked pair (on-tree or discovered on first use)
+        # registering a mailbox with the relay store: one PUT/GET round trip
+        # per endpoint.
+        relays = {pair: fabric.relay for pair in blocked}
+        if blocked:
+            per_obj = fabric.relay.alpha_s + fabric.relay.store_alpha_s
+            t = len(blocked) * 2.0 * per_obj
+            events.append(CommEvent(
+                CollectiveKind.BOOTSTRAP, world, 0, t,
+                algo="relay_fallback", relay=fabric.relay.name,
+                relayed_pairs=len(blocked),
+            ))
+
+        link_map = LinkMap(world, direct, relays, fabric.relay)
+        return cls(world, link_map, fabric, server, events)
+
+    # -- accounting -----------------------------------------------------------
+
+    @property
+    def direct_channel(self) -> netsim.ChannelModel:
+        return self.link_map.direct
+
+    @property
+    def bootstrap_time_s(self) -> float:
+        """Priced initial bootstrap (excludes per-rank re-bootstraps)."""
+        from repro.core.communicator import CollectiveKind
+
+        return float(sum(
+            e.time_s for e in self.events
+            if e.kind == CollectiveKind.BOOTSTRAP
+            and not e.algo.startswith("rebootstrap")
+        ))
+
+    @property
+    def rebootstrap_time_s(self) -> float:
+        from repro.core.communicator import CollectiveKind
+
+        return float(sum(
+            e.time_s for e in self.events
+            if e.kind == CollectiveKind.BOOTSTRAP
+            and e.algo.startswith("rebootstrap")
+        ))
+
+    def reset_events(self, keep_bootstrap: bool = True) -> None:
+        """Clear collective events; bootstrap history survives by default.
+        In-place so every communicator aliasing this log stays wired."""
+        from repro.core.communicator import CollectiveKind
+
+        kept = [
+            e for e in self.events
+            if keep_bootstrap and e.kind == CollectiveKind.BOOTSTRAP
+        ]
+        self.events[:] = kept
+
+    # -- handles --------------------------------------------------------------
+
+    def communicator(self, algorithm: str = "auto") -> "Communicator":
+        """Root communicator over the whole session (use ``.split`` for
+        sub-groups per mesh axis)."""
+        from repro.core.communicator import Communicator
+
+        return Communicator(session=self, algorithm=algorithm)
+
+    def rebootstrap_rank(self, rank: int) -> float:
+        """Re-join a deadline-killed / preempted rank through the session.
+
+        The re-invoked function re-registers in its rendezvous slot (a new
+        NAT binding — ``RendezvousServer.reassign_rank`` overwrites the
+        stale mapping, the §III-D hazard) and re-punches its ≤ ceil(log2 P)
+        tree connections, one per level.  Priced as a ``BOOTSTRAP`` event in
+        the shared log; returns the modeled seconds.  Implicit all-direct
+        sessions have no bootstrap lifecycle to replay: no-op, 0.0.
+        """
+        from repro.core.communicator import CollectiveKind, CommEvent
+
+        if not (0 <= int(rank) < self.world):
+            raise ValueError(f"rank {rank} out of range for world {self.world}")
+        if self.fabric is None:
+            return 0.0
+        if self.server is not None:
+            self.server.reassign_rank(int(rank), f"10.0.0.{int(rank)}")
+        direct = self.fabric.direct_channel
+        if direct.staged:
+            t = mediated_bootstrap_time(direct, self.world)
+        else:
+            # the replayed lifecycle costs what the original did: base
+            # rendezvous + one re-punch per tree level (the calibrated
+            # closed form, so rebootstrap can never drift from bootstrap)
+            t = self.fabric.platform.init_time(self.world)
+        self.events.append(CommEvent(
+            CollectiveKind.BOOTSTRAP, self.world, 0, t, algo=f"rebootstrap_r{int(rank)}",
+        ))
+        return t
+
+
+def hybrid_session(
+    world: int,
+    blocked_pairs: Iterable = (),
+    *,
+    relay: str | netsim.ChannelModel = "redis",
+    platform: netsim.PlatformModel = netsim.LAMBDA_10GB,
+    blocked_ranks: Iterable = (),
+) -> CommSession:
+    """One-call hybrid topology: bootstrap a session in which
+    ``blocked_pairs`` failed hole punching and relay through ``relay``."""
+    relay_ch = netsim.CHANNELS[relay] if isinstance(relay, str) else relay
+    if not relay_ch.staged:
+        raise ValueError(f"relay channel must be staged, got {relay_ch.name!r}")
+    fabric = Fabric(
+        platform=platform,
+        relay=relay_ch,
+        blocked_pairs=frozenset(tuple(sorted(p)) for p in blocked_pairs),
+        blocked_ranks=frozenset(int(r) for r in blocked_ranks),
+    )
+    return CommSession.bootstrap(world, fabric)

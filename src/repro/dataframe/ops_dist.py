@@ -9,6 +9,12 @@ Two surfaces, same algorithm:
 
 - **sim_***: per-rank ``list[Table]`` through a :class:`Communicator` — the
   BSP/benchmark surface whose event log prices communication (any substrate).
+  The communicator may be a ``CommSession`` root or a ``comm.split()``
+  sub-group (one shuffle per mesh axis): the per-pair link table follows the
+  group, so a shuffle whose group contains a hole-punch-failed pair is
+  automatically priced at the relayed hybrid schedule while producing
+  byte-identical rows (only the event log's timing differs — tested in
+  test_session.py).
 - ***_spmd**: inside ``shard_map`` over a mesh axis — the production path
   (direct ICI collectives), lowered and dry-run at pod scale.
 

@@ -76,6 +76,7 @@ def train(
     log_every: int = 10,
     resume: bool = False,
     stop_after: int | None = None,
+    comm_session=None,
     log=print,
 ):
     """Train ``cfg`` for ``steps`` steps.
@@ -84,6 +85,12 @@ def train(
     the LR schedule stays pinned to ``steps`` but the loop exits after that
     many global steps — a later ``resume=True`` call with the same ``steps``
     continues the identical trajectory from the latest checkpoint.
+
+    ``comm_session`` (a :class:`repro.core.session.CommSession`) models the
+    worker's communication fabric: a resumed run is a deadline-killed /
+    preempted rank coming back, so it re-bootstraps through the session
+    (re-rendezvous + re-punch, priced into the session's event log) before
+    training continues — the paper's §V recovery path made explicit.
     """
     opt_cfg = opt.OptConfig(
         lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps,
@@ -124,6 +131,11 @@ def train(
             grad_err = tree["grad_err"]
         start = ckpt.read_manifest(latest)["step"]
         log(f"resumed from step {start}")
+        if comm_session is not None and start > 0:
+            reboot_s = comm_session.rebootstrap_rank(0)
+            log(f"re-bootstrap: rank 0 re-joined its CommSession "
+                f"(world {comm_session.world}) in {reboot_s:.1f}s modeled "
+                f"rendezvous + re-punch")
 
     if cfg.grad_compression:
         rep = compression.wire_bytes_saved(params)
@@ -189,14 +201,23 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--stop-after", type=int, default=None,
                     help="exit after this many global steps (preemption drill)")
+    ap.add_argument("--comm-world", type=int, default=32,
+                    help="modeled communication-session world for the "
+                         "re-bootstrap pricing on --resume")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    comm_session = None
+    if args.resume:
+        from repro.core.session import CommSession
+
+        comm_session = CommSession.bootstrap(args.comm_world, "lambda")
     _, losses = train(
         cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume, stop_after=args.stop_after,
+        comm_session=comm_session,
     )
     if losses:
         print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")

@@ -1,0 +1,431 @@
+"""CommSession: bootstrap lifecycle, sub-groups (split), hybrid per-pair links.
+
+Covers the ISSUE 5 acceptance criteria: bootstrap priced as events summing to
+the calibrated init model, MPI comm_split semantics against a reference
+oracle, hole-punch-failed pairs completing every collective byte-identically
+over relayed links (with the relay recorded per event), and the compat
+guarantee that an implicit all-direct session prices exactly like the
+pre-session Communicator.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BSPRuntime,
+    CollectiveKind,
+    Communicator,
+    CommSession,
+    Fabric,
+    algorithms,
+    hybrid_session,
+    nat,
+    netsim,
+)
+from repro.core import cost_model as cm
+from repro.core import session as sess
+from repro.core.backends import mediated
+from repro.dataframe import Table, ops_dist
+
+
+def _bootstrap_events(s):
+    return [e for e in s.events if e.kind == CollectiveKind.BOOTSTRAP]
+
+
+class TestBootstrapLifecycle:
+    def test_prices_sum_to_init_time(self):
+        """Rendezvous + per-level punch events reproduce the paper's init
+        model (~31.5 s at 32 Lambda workers, Fig 14)."""
+        for world in (2, 4, 8, 32):
+            s = CommSession.bootstrap(world, "lambda")
+            assert s.bootstrap_time_s == pytest.approx(
+                netsim.LAMBDA_10GB.init_time(world), rel=1e-12)
+            evs = _bootstrap_events(s)
+            # one rendezvous event + one per binomial-tree level
+            assert len(evs) == 1 + len(nat.connection_schedule(world))
+            assert evs[0].algo == "rendezvous"
+            assert all(e.algo.startswith("hole_punch") for e in evs[1:])
+
+    def test_rank_assignment_is_atomic_and_complete(self):
+        s = CommSession.bootstrap(4, "lambda")
+        for r in range(4):
+            assert s.server.peer_address(r).startswith("54.")
+
+    def test_reused_namespace_raises(self):
+        """Bootstrapping against an uncleaned server is the paper's §III-D
+        stale-metadata failure."""
+        srv = nat.RendezvousServer(4)
+        CommSession.bootstrap(4, "lambda", server=srv)
+        with pytest.raises(nat.StaleMetadataError):
+            CommSession.bootstrap(4, "lambda", server=srv)
+        srv.clear()
+        CommSession.bootstrap(4, "lambda", server=srv)  # clean namespace ok
+
+    def test_blocked_pair_falls_back_to_relay(self):
+        s = hybrid_session(8, [(0, 1)], relay="redis")
+        link = s.link_map.link(0, 1)
+        assert link.relayed and link.channel.name == "redis"
+        assert not s.link_map.link(2, 3).relayed
+        (fb,) = [e for e in _bootstrap_events(s) if e.algo == "relay_fallback"]
+        assert fb.relay == "redis" and fb.relayed_pairs == 1
+        # fallback setup + burned retries make bootstrap strictly pricier
+        clean = CommSession.bootstrap(8, "lambda")
+        assert s.bootstrap_time_s > clean.bootstrap_time_s
+
+    def test_blocked_rank_relays_every_link(self):
+        s = hybrid_session(4, [], blocked_ranks=[2])
+        assert s.link_map.relayed_pairs() == ((0, 2), (1, 2), (2, 3))
+
+    def test_mediated_fabric_store_rendezvous(self):
+        """A staged direct channel means nothing to punch: one rendezvous
+        event priced by the store model (the cost-model satellite)."""
+        s = CommSession.bootstrap(32, "s3")
+        (ev,) = _bootstrap_events(s)
+        assert ev.algo == "store_rendezvous"
+        assert s.bootstrap_time_s == pytest.approx(
+            sess.mediated_bootstrap_time(netsim.S3_STAGED, 32))
+
+    def test_transient_punch_failures_priced_not_relayed(self):
+        f = Fabric(platform=netsim.LAMBDA_10GB, punch_fail_prob=0.3, seed=7)
+        s = CommSession.bootstrap(16, f)
+        assert s.link_map.all_direct  # transient failures retry to success
+        assert s.bootstrap_time_s > netsim.LAMBDA_10GB.init_time(16)
+
+    def test_rebootstrap_rank_priced_and_logged(self):
+        s = CommSession.bootstrap(8, "lambda")
+        before = s.bootstrap_time_s
+        t = s.rebootstrap_rank(5)
+        assert t == pytest.approx(
+            netsim.LAMBDA_10GB.init_base_s + 3 * netsim.LAMBDA_10GB.init_per_level_s)
+        assert s.rebootstrap_time_s == pytest.approx(t)
+        assert s.bootstrap_time_s == before  # initial bootstrap unchanged
+        # the re-invoked function got a fresh NAT binding
+        assert s.server.peer_address(5).endswith(":50005")
+
+    def test_rebootstrap_noop_on_implicit_session(self):
+        c = Communicator(4)
+        assert c.session.rebootstrap_rank(2) == 0.0
+        assert c.session.events == []
+
+
+class TestImplicitSessionCompat:
+    """Communicator(world_size=P) must price bit-identically to PR 4."""
+
+    def test_fixed_prices_match_calibrated_model(self):
+        c = Communicator(8, algorithm="fixed")
+        c.allreduce([np.ones(1024)] * 8)
+        c.barrier()
+        sends = [[np.ones(16) for _ in range(8)] for _ in range(8)]
+        c.alltoallv(sends)
+        c.gather([np.ones(32)] * 8)
+        expected = [
+            netsim.collective_time(netsim.LAMBDA_DIRECT, "allreduce", 8, 8192),
+            netsim.collective_time(netsim.LAMBDA_DIRECT, "barrier", 8, 0),
+            netsim.collective_time(netsim.LAMBDA_DIRECT, "alltoall", 8, 64),
+            netsim.collective_time(netsim.LAMBDA_DIRECT, "alltoallv", 8, 16 * 8 * 8),
+            netsim.collective_time(netsim.LAMBDA_DIRECT, "gather", 8,
+                                   -(-32 * 8 * 7 // 8)),
+        ]
+        assert [e.time_s for e in c.events] == expected
+        assert all(e.algo == "fixed" for e in c.events)
+        assert all(e.relay is None and e.relayed_pairs == 0 for e in c.events)
+
+    def test_auto_prices_match_engine(self):
+        c = Communicator(16)  # algorithm="auto" default
+        c.allreduce([np.ones(4096)] * 16)
+        choice = algorithms.select_algorithm(
+            "allreduce", 16, 4096 * 8, netsim.LAMBDA_DIRECT)
+        (ev,) = c.events
+        assert ev.time_s == choice.time_s and ev.algo == choice.algorithm
+
+    def test_bootstrapped_all_direct_session_prices_like_implicit(self):
+        """Collective pricing is identical with or without bootstrap; only
+        the BOOTSTRAP events differ."""
+        imp = Communicator(8, algorithm="fixed")
+        boot = CommSession.bootstrap(8, "lambda").communicator(algorithm="fixed")
+        imp.allreduce([np.ones(256)] * 8)
+        boot.allreduce([np.ones(256)] * 8)
+        i_ev = imp.events[-1]
+        b_ev = boot.events[-1]
+        assert i_ev.time_s == b_ev.time_s and i_ev.algo == b_ev.algo
+
+
+def _mpi_split_oracle(colors, keys):
+    """Reference MPI_Comm_split: per color, ranks ordered by (key, rank)."""
+    groups = {}
+    for r, c in enumerate(colors):
+        if c is not None:
+            groups.setdefault(c, []).append(r)
+    out = {}
+    for c, ranks in groups.items():
+        out[c] = [r for _, r in sorted((keys[r], r) for r in ranks)]
+    return out
+
+
+class TestSplit:
+    def test_color_key_semantics_vs_oracle(self):
+        cases = [
+            ([0, 0, 1, 1, 0, 1, 2, 2], [0] * 8),
+            ([0, 1, 0, 1, 0, 1, 0, 1], [3, 2, 1, 0, 3, 2, 1, 0]),
+            ([5, 5, 5, 5, 5, 5, 5, 5], [7, 7, 1, 1, 0, 0, 9, 9]),  # ties -> rank order
+            ([0, None, 0, None, 1, 1, None, 0], [1, 0, 0, 0, 2, 1, 0, 2]),
+        ]
+        for colors, keys in cases:
+            comm = Communicator(8)
+            subs = comm.split(colors, keys)
+            oracle = _mpi_split_oracle(colors, keys)
+            for r in range(8):
+                if colors[r] is None:
+                    assert subs[r] is None
+                    continue
+                assert subs[r].group == tuple(oracle[colors[r]])
+                # rank r's position inside the sub-communicator
+                assert subs[r].local_rank(r) == oracle[colors[r]].index(r)
+
+    def test_same_color_shares_instance(self):
+        comm = Communicator(4)
+        subs = comm.split([0, 0, 1, 1])
+        assert subs[0] is subs[1] and subs[2] is subs[3]
+        assert subs[0] is not subs[2]
+
+    def test_nested_split_dp_mp_mesh(self):
+        """The dp x mp decomposition: rows then columns, global ids compose."""
+        comm = CommSession.bootstrap(8, "lambda").communicator()
+        rows = comm.split([r // 4 for r in range(8)])       # 2 rows of 4
+        assert rows[0].group == (0, 1, 2, 3)
+        assert rows[7].group == (4, 5, 6, 7)
+        row0 = rows[0]
+        cols = row0.split([r % 2 for r in range(row0.world_size)])
+        assert cols[0].group == (0, 2)  # global session ranks survive nesting
+        assert cols[1].group == (1, 3)
+
+    def test_split_world_and_collectives(self):
+        comm = Communicator(6)
+        subs = comm.split([0, 1, 0, 1, 0, 1])
+        sub = subs[0]
+        assert sub.world_size == 3
+        out = sub.allreduce([np.full(4, float(i)) for i in range(3)])
+        np.testing.assert_array_equal(out[0], np.full(4, 3.0))
+
+    def test_split_shares_event_log(self):
+        comm = Communicator(8)
+        subs = comm.split([r % 2 for r in range(8)])
+        subs[0].allreduce([np.ones(8)] * 4)
+        subs[1].barrier()
+        assert comm.events is subs[0].events  # one session log
+        assert [e.kind for e in comm.events] == [
+            CollectiveKind.ALLREDUCE, CollectiveKind.BARRIER]
+        assert comm.events[0].world == 4  # priced at the sub-group size
+
+    def test_split_inherits_link_table(self):
+        """A sub-group containing the failed pair prices relayed; a disjoint
+        sub-group prices all-direct."""
+        s = hybrid_session(8, [(1, 3)])
+        comm = s.communicator()
+        subs = comm.split([r % 2 for r in range(8)])  # odds: (1,3,5,7)
+        odd, even = subs[1], subs[0]
+        odd.allreduce([np.ones(64)] * 4)
+        ev_odd = comm.events[-1]
+        assert ev_odd.relay == "redis" and ev_odd.relayed_pairs == 1
+        even.allreduce([np.ones(64)] * 4)
+        ev_even = comm.events[-1]
+        assert ev_even.relay is None and ev_even.relayed_pairs == 0
+        assert ev_odd.time_s >= ev_even.time_s
+
+    def test_split_validation(self):
+        comm = Communicator(4)
+        with pytest.raises(ValueError):
+            comm.split([0, 0, 0])  # wrong length
+        with pytest.raises(ValueError):
+            comm.split([0] * 4, key=[0] * 3)
+
+
+class TestHybridLinks:
+    def _worlds(self, world=4, blocked=((0, 1),)):
+        direct = Communicator(world)
+        hybrid = hybrid_session(world, blocked).communicator()
+        return direct, hybrid
+
+    def test_collectives_byte_identical_only_timing_differs(self):
+        """Acceptance: a session with a hole-punch-failed pair completes
+        every collective with results identical to all-direct."""
+        rng = np.random.default_rng(0)
+        direct, hybrid = self._worlds()
+        xs = [rng.normal(size=(4, 3)) for _ in range(4)]
+        for op in ("allreduce", "allgather"):
+            d = getattr(direct, op)(xs)
+            h = getattr(hybrid, op)(xs)
+            for a, b in zip(d, h):
+                np.testing.assert_array_equal(a, b)
+        vs = [rng.normal(size=(i + 1,)) for i in range(4)]
+        for a, b in zip(direct.allgatherv(vs), hybrid.allgatherv(vs)):
+            np.testing.assert_array_equal(a, b)
+        sends = [[rng.normal(size=(s + d,)) for d in range(4)] for s in range(4)]
+        dr, dc = direct.alltoallv(sends)
+        hr, hc = hybrid.alltoallv(sends)
+        np.testing.assert_array_equal(dc, hc)
+        for i in range(4):
+            for j in range(4):
+                np.testing.assert_array_equal(dr[i][j], hr[i][j])
+        for a, b in zip(direct.bcast(xs[0], root=2), hybrid.bcast(xs[0], root=2)):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(
+            direct.scatter(xs)[1], hybrid.scatter(xs)[1])
+        # every hybrid event records the relay, and never prices below direct
+        d_ev = [e for e in direct.events if e.kind != CollectiveKind.BOOTSTRAP]
+        h_ev = [e for e in hybrid.events if e.kind != CollectiveKind.BOOTSTRAP]
+        assert len(d_ev) == len(h_ev)
+        for de, he in zip(d_ev, h_ev):
+            assert he.relay == "redis" and he.relayed_pairs == 1
+            assert he.time_s >= de.time_s - 1e-12
+
+    def test_join_byte_identical_over_hybrid_links(self):
+        """The shuffle-join pipeline over a relayed topology returns the
+        same rows as all-direct (only the event log's pricing differs)."""
+        p, rows = 4, 64
+        def tables(seed_off):
+            r = np.random.default_rng(seed_off)
+            return [
+                Table.from_dict(
+                    {"k": (np.arange(rows) * p + i).astype(np.int64),
+                     "v": r.normal(size=rows)},
+                    capacity=rows * p * 2,
+                )
+                for i in range(p)
+            ]
+        direct, hybrid = self._worlds(p, blocked=((0, 3), (1, 2)))
+        out_d = ops_dist.sim_join(tables(1), tables(2), "k", direct)
+        out_h = ops_dist.sim_join(tables(1), tables(2), "k", hybrid)
+        for td, th in zip(out_d, out_h):
+            assert td.count == th.count
+            order_d = np.argsort(np.asarray(td.columns["k"])[:td.count])
+            order_h = np.argsort(np.asarray(th.columns["k"])[:th.count])
+            for col in td.columns:
+                np.testing.assert_array_equal(
+                    np.asarray(td.columns[col])[:td.count][order_d],
+                    np.asarray(th.columns[col])[:th.count][order_h])
+        assert hybrid.comm_time_s > direct.comm_time_s
+
+    def test_fully_relayed_prices_as_staged_engine(self):
+        """Zero punched links == store-mediated: the engine must price
+        exactly the staged schedules, never below (the CI (b) bound)."""
+        world = 4
+        all_pairs = [(a, b) for a in range(world) for b in range(a + 1, world)]
+        comm = hybrid_session(world, all_pairs, relay="s3").communicator()
+        comm.allreduce([np.ones(4096)] * world)
+        ev = comm.events[-1]
+        pure = algorithms.select_algorithm(
+            "allreduce", world, 4096 * 8, netsim.S3_STAGED, cache=None)
+        assert ev.time_s == pytest.approx(pure.time_s)
+        assert ev.algo == f"{pure.algorithm}@relay"
+
+    def test_autotuner_routes_around_off_schedule_pair(self):
+        """(2,5) is on no tree/xor/ring/bruck round at world 8, so tuned
+        allreduce prices all-direct — the engine routed around the damage —
+        while ring (adjacent pairs every round) would pay the relay."""
+        links = hybrid_session(8, [(2, 5)]).link_map.group_links(tuple(range(8)))
+        tuned = algorithms.select_hybrid("allreduce", 8, 1 << 20, links)
+        direct = algorithms.select_algorithm(
+            "allreduce", 8, 1 << 20, netsim.LAMBDA_DIRECT, cache=None)
+        assert tuned.time_s == pytest.approx(direct.time_s, rel=1e-9)
+        # an adjacent blocked pair penalizes ring in every round
+        adj = hybrid_session(8, [(3, 4)]).link_map.group_links(tuple(range(8)))
+        ring_adj = algorithms.hybrid_algorithm_time(adj, "allreduce", 1 << 20, "ring")
+        ring_direct = algorithms.algorithm_time(
+            netsim.LAMBDA_DIRECT, "allreduce", 8, 1 << 20, "ring")
+        assert ring_adj > 2 * ring_direct
+        assert algorithms.select_hybrid("allreduce", 8, 1 << 20, adj).time_s < ring_adj
+
+    def test_hybrid_round_structure_consistent_with_closed_forms(self):
+        """The per-round decomposition must reproduce _DIRECT_COSTS exactly
+        when no pair is relayed (one relayed pair never prices below)."""
+        ch = netsim.LAMBDA_DIRECT
+        relay_one = algorithms.GroupLinks(
+            8, ch, ((0, 1, netsim.REDIS_STAGED),), netsim.REDIS_STAGED)
+        no_relay_direct = algorithms.GroupLinks(8, ch, (), netsim.REDIS_STAGED)
+        for kind in ("allreduce", "reduce_scatter", "allgather", "bcast",
+                     "alltoall", "barrier"):
+            for algo in algorithms.algorithms_for(ch, kind):
+                closed = algorithms.algorithm_time(ch, kind, 8, 4096, algo)
+                assert algorithms.hybrid_algorithm_time(
+                    no_relay_direct, kind, 4096, algo) == closed
+                assert algorithms.hybrid_algorithm_time(
+                    relay_one, kind, 4096, algo) >= closed - 1e-15
+
+    def test_p2p_priced_at_peer_link(self):
+        comm = hybrid_session(4, [(0, 2)]).communicator()
+        comm.send(np.ones(128), dst=2)   # peer behind a failed punch
+        comm.send(np.ones(128), dst=3)   # clean peer
+        relayed, clean = comm.events[-2], comm.events[-1]
+        assert relayed.algo == "p2p@relay" and relayed.relay == "redis"
+        assert clean.relay is None
+        assert relayed.time_s > clean.time_s
+
+    def test_hybrid_communicator_helper(self):
+        comm = mediated.hybrid_communicator(4, [(0, 1)], relay="s3")
+        comm.barrier()
+        assert comm.events[-1].relay == "s3"
+
+
+class TestSessionIntegration:
+    def test_bsp_init_from_session_events(self):
+        rt = BSPRuntime(4, platform=netsim.LAMBDA_10GB)
+        assert rt.session.bootstrap_time_s == pytest.approx(
+            netsim.LAMBDA_10GB.init_time(4))
+
+    def test_bsp_deadline_kill_rebootstraps_through_session(self):
+        rt = BSPRuntime(4, platform=netsim.RIVANNA_10GB, deadline_s=0.5)
+        _, report = rt.run(
+            [("s", lambda rank, st, comm, world: st + 1)], [0.0] * 4,
+            straggle_injector=lambda step, rank: 10.0 if rank == 2 else 0.0,
+        )
+        (step,) = report.supersteps
+        assert step.retries == 1
+        expected = (netsim.RIVANNA_10GB.init_base_s
+                    + 2 * netsim.RIVANNA_10GB.init_per_level_s)
+        assert step.rebootstrap_s == pytest.approx(expected)
+        assert rt.session.rebootstrap_time_s == pytest.approx(expected)
+        assert step.total_s >= step.rebootstrap_s
+
+    def test_bsp_over_hybrid_session(self):
+        s = hybrid_session(4, [(0, 1)])
+        rt = BSPRuntime(4, session=s)
+
+        def step(rank, state, comm, world):
+            out = comm.allreduce([np.asarray(1.0)] * world)
+            return float(out[rank]) + state
+
+        states, report = rt.run([("s", step)], [0.0] * 4)
+        assert states == [4.0] * 4
+        relayed = [e for e in s.events
+                   if e.kind == CollectiveKind.ALLREDUCE and e.relay]
+        assert relayed  # the superstep's reduction priced over the relay
+
+    def test_cost_model_mediated_init_priced_not_hardcoded(self):
+        """Satellite: the 1.0 s non-direct init is gone — mediated bootstrap
+        goes through the store-rendezvous model."""
+        redis = cm.join_cost(32, channel="redis")
+        s3 = cm.join_cost(32, channel="s3")
+        assert redis.init_s == pytest.approx(
+            sess.mediated_bootstrap_time(netsim.REDIS_STAGED, 32))
+        assert s3.init_s == pytest.approx(
+            sess.mediated_bootstrap_time(netsim.S3_STAGED, 32))
+        assert redis.init_s != 1.0 and s3.init_s != 1.0
+        assert redis.init_s < s3.init_s < 1.0  # both cheaper than NAT traversal
+        direct = cm.join_cost(32, channel="direct")
+        assert direct.init_s == pytest.approx(netsim.LAMBDA_10GB.init_time(32))
+
+    def test_train_resume_rebootstraps(self, tmp_path):
+        from repro import configs
+        from repro.launch.train import train
+
+        cfg = configs.get("minicpm-2b").reduced()
+        logs = []
+        train(cfg, steps=4, batch=2, seq_len=16, ckpt_dir=tmp_path,
+              ckpt_every=2, stop_after=2, log=logs.append)
+        session = CommSession.bootstrap(8, "lambda")
+        train(cfg, steps=4, batch=2, seq_len=16, ckpt_dir=tmp_path,
+              ckpt_every=2, resume=True, comm_session=session,
+              log=logs.append)
+        assert any("re-bootstrap" in line for line in logs)
+        assert session.rebootstrap_time_s > 0
