@@ -12,7 +12,9 @@ backends and reports:
   latency + bandwidth) plus S3 request cost in USD,
 - full restore vs ranged restore onto one shard of a model-parallel mesh
   (``dist.checkpoint.restore_sharded`` with ``dist.sharding.param_specs``):
-  the ranged path must move strictly fewer bytes — CI asserts < 60%.
+  the ranged path must move strictly fewer bytes — CI asserts < 60% — AND,
+  now that ranged GETs fan out over the store's pooled client
+  (``Store.get_ranges``), model strictly less time than the full restore.
 
 Emits ``experiments/BENCH_ckpt_store.json``.
 """
@@ -109,6 +111,14 @@ def write_report(out: str | Path) -> dict:
     if frac >= 0.6:
         raise SystemExit(
             f"ranged restore moved {frac:.1%} of full-restore bytes (>= 60%)"
+        )
+    ranged_s = res["s3"]["restore_ranged"]["model_s"]
+    full_s = res["s3"]["restore_full"]["model_s"]
+    if ranged_s >= full_s:
+        raise SystemExit(
+            f"ranged restore modeled {ranged_s:.3f}s >= full restore "
+            f"{full_s:.3f}s — the pooled ranged path must win on time, "
+            f"not only bytes"
         )
     return res
 

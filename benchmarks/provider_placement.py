@@ -1,0 +1,200 @@
+"""Provider placement Pareto + burst-elasticity benchmark.
+
+The provider fabric registry (``core.netsim.ProviderProfile``) makes "where
+to run" a tunable next to "how to communicate".  This benchmark exercises
+both new decision surfaces:
+
+1. **Placement Pareto** — ``core.algorithms.select_placement`` prices a
+   BSP-shaped workload (compute + tuned collectives) on every registered
+   provider at world {8, 32, 64} and sweeps the deadline: each sweep point
+   records the cheapest feasible provider, tracing the deadline-vs-$ Pareto
+   frontier (tight deadlines buy the fast serverful/HPC fabrics, loose ones
+   fall to the cheapest per-GB-s bidder).
+
+2. **Burst elasticity** — a 16-rank core group absorbs a +16 burst mid-run
+   through ``CommSession.expand`` (same-provider, and cross-provider from a
+   serverful EC2 core to Lambda burst workers), comparing the incremental
+   expand price against a cold full re-bootstrap of the grown world
+   (``session.full_rebootstrap_time_s``) and pricing each rank at its own
+   provider's rates (``cost_model.heterogeneous_run_cost``).
+
+Emits ``experiments/BENCH_provider_placement.json``.  CI gates:
+(a) placement never returns an infeasible provider when a feasible one
+exists (checked over the whole sweep), with cost monotone non-increasing in
+the deadline; (b) every burst scenario's expand cost is strictly below the
+cold re-bootstrap of the same expanded world.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import algorithms, bsp, cost_model, netsim
+from repro.core import session as _session
+
+PROVIDERS = ("aws-lambda", "aws-ec2", "gcp-cloudrun", "hpc-slurm")
+WORLDS = (8, 32, 64)
+
+# BSP-shaped workload: datagen+compute seconds at cpu_speed 1.0, plus the
+# join-style exchange pattern (alltoallv shuffle rounds + dp reductions)
+COMPUTE_S = 120.0
+N_SHUFFLE = 10
+N_REDUCE = 20
+
+
+def _workload(world: int) -> algorithms.Workload:
+    shuffle_bytes = int(4.5e6 / world * 2 * 16)  # the Fig 15/16 join basis
+    reduce_bytes = 1 << 22
+    return algorithms.Workload(
+        world=world,
+        compute_s=COMPUTE_S,
+        collectives=(
+            ("alltoallv", shuffle_bytes, N_SHUFFLE),
+            ("barrier", 0, N_SHUFFLE),
+            ("allreduce", reduce_bytes, N_REDUCE),
+        ),
+        mem_gb=10.0,
+    )
+
+
+def _deadline_sweep(world: int) -> dict:
+    """Sweep deadlines from infeasible-for-everyone to loose."""
+    w = _workload(world)
+    bids = algorithms.placement_candidates(w, PROVIDERS)
+    times = sorted(b.time_s for b in bids)
+    # sweep points below, between, and above the candidates' makespans
+    deadlines = [times[0] * 0.5]
+    deadlines += [t * 1.01 for t in times]
+    deadlines += [times[-1] * 2.0, times[-1] * 10.0]
+    sweep = []
+    prev_cost = None
+    for dl in deadlines:
+        p = algorithms.select_placement(w, PROVIDERS, dl)
+        feasible_exists = any(b.time_s <= dl for b in bids)
+        assert p.feasible == feasible_exists, (
+            f"placement feasibility wrong at deadline {dl:.1f}s (world {world})"
+        )
+        if p.feasible:
+            assert prev_cost is None or p.cost_usd <= prev_cost + 1e-12, (
+                f"cost not monotone in deadline at {dl:.1f}s (world {world})"
+            )
+            prev_cost = p.cost_usd
+        sweep.append({
+            "deadline_s": dl,
+            "provider": p.provider,
+            "feasible": p.feasible,
+            "time_s": p.time_s,
+            "cost_usd": p.cost_usd,
+        })
+    return {
+        "world": world,
+        "candidates": [
+            {
+                "provider": b.provider, "time_s": b.time_s,
+                "cost_usd": b.cost_usd, "init_s": b.init_s,
+                "compute_s": b.compute_s, "comm_s": b.comm_s,
+            }
+            for b in bids
+        ],
+        "sweep": sweep,
+    }
+
+
+def _burst_step(rank, state, comm, world):
+    comm.allreduce([np.ones(64, np.float32)] * world)
+    return (state or 0) + 1
+
+
+def _burst_scenario(core_fabric: str, burst_provider: str | None) -> dict:
+    """Core 16 absorbs +16 mid-run; expand vs cold full re-bootstrap."""
+    sess = _session.CommSession.bootstrap(16, core_fabric)
+    rt = bsp.BSPRuntime(16, session=sess)
+    steps = [(f"s{i}", _burst_step) for i in range(4)]
+    _, report = rt.run(
+        steps, [0] * 16,
+        burst=bsp.Burst(at_step=2, new_ranks=16, provider=burst_provider),
+    )
+    expand_s = sess.expand_time_s
+    full_s = sess.full_rebootstrap_time_s()
+    assert expand_s < full_s, (
+        f"expand {expand_s:.1f}s not cheaper than cold bootstrap {full_s:.1f}s "
+        f"({core_fabric} +16 {burst_provider or core_fabric})"
+    )
+    costs = cost_model.heterogeneous_run_cost(
+        report, sess, default_provider=(
+            core_fabric if core_fabric in PROVIDERS else "aws-lambda"
+        ),
+    )
+    return {
+        "core_fabric": core_fabric,
+        "burst_provider": burst_provider,
+        "world": sess.world,
+        "expand_s": expand_s,
+        "full_rebootstrap_s": full_s,
+        "expand_vs_full": expand_s / full_s,
+        "relayed_pairs": len(sess.link_map.relayed_pairs()),
+        "override_pairs": len(sess.link_map.override_pairs()),
+        "run_total_s": report.total_s,
+        "cost": {
+            "total_usd": costs["total_usd"],
+            "per_provider_usd": costs["per_provider_usd"],
+        },
+    }
+
+
+def run() -> dict:
+    return {
+        "providers": {
+            name: {
+                "kind": netsim.get_provider(name).kind,
+                "usd_per_gb_s": netsim.get_provider(name).usd_per_gb_s,
+                "nat_blocked_rate": netsim.get_provider(name).nat_blocked_rate,
+            }
+            for name in PROVIDERS
+        },
+        "placement": [_deadline_sweep(w) for w in WORLDS],
+        "burst": [
+            _burst_scenario("aws-lambda", None),
+            _burst_scenario("aws-ec2", "aws-lambda"),
+            _burst_scenario("aws-ec2", "gcp-cloudrun"),
+        ],
+    }
+
+
+def write_report(out: str | Path) -> dict:
+    res = run()  # the run itself asserts the placement + expand gates
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main(report=print) -> None:
+    res = run()
+    for pl in res["placement"]:
+        w = pl["world"]
+        for c in pl["candidates"]:
+            report(
+                f"provider_placement/w{w}_{c['provider']}_time_s,,{c['time_s']:.2f}"
+            )
+            report(
+                f"provider_placement/w{w}_{c['provider']}_cost_usd,,{c['cost_usd']:.4f}"
+            )
+    for b in res["burst"]:
+        tag = f"{b['core_fabric']}+{b['burst_provider'] or 'same'}"
+        report(f"provider_placement/burst_{tag}_expand_s,,{b['expand_s']:.2f}")
+        report(
+            f"provider_placement/burst_{tag}_vs_full,,{b['expand_vs_full']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/BENCH_provider_placement.json")
+    args = ap.parse_args()
+    res = write_report(args.out)
+    print(json.dumps(res, indent=1))

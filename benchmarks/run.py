@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   ckpt_store         checkpoint store: local vs s3-priced, full vs ranged restore
   collective_algos   tuned algorithm selection vs fixed schedules (engine sweep)
   hybrid_links       link-aware pricing vs hole-punch-failed pair fraction
+  provider_placement deadline-vs-$ placement Pareto + burst expand vs re-bootstrap
 """
 
 from __future__ import annotations
@@ -31,6 +32,7 @@ def main() -> None:
         groupby_scaling,
         hybrid_links,
         local_ops,
+        provider_placement,
         roofline,
         scaling_join,
         time_composition,
@@ -48,6 +50,7 @@ def main() -> None:
         ("ckpt_store", ckpt_store),
         ("collective_algos", collective_algos),
         ("hybrid_links", hybrid_links),
+        ("provider_placement", provider_placement),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -1,16 +1,27 @@
 """Core: the paper's contribution — serverless communicator, comm sessions
 (bootstrap lifecycle + per-pair links), BSP runtime, NAT-traversal control
-plane, network/cost models."""
+plane, network/cost models, provider fabric registry + cost-aware placement."""
 
+from repro.core.netsim import (  # noqa: F401
+    ProviderProfile,
+    get_provider,
+    providers,
+    register_provider,
+)
 from repro.core.algorithms import (  # noqa: F401
     Choice,
     DecisionCache,
     GroupLinks,
+    Placement,
+    Workload,
     algorithm_time,
     algorithms_for,
     hybrid_algorithm_time,
+    placement_candidates,
+    provider_links,
     select_algorithm,
     select_hybrid,
+    select_placement,
     tuned_time,
 )
 from repro.core.session import (  # noqa: F401
@@ -21,6 +32,7 @@ from repro.core.session import (  # noqa: F401
     LinkMap,
     hybrid_session,
     mediated_bootstrap_time,
+    provider_fabric,
 )
 from repro.core.communicator import (  # noqa: F401
     CollectiveKind,
@@ -28,4 +40,10 @@ from repro.core.communicator import (  # noqa: F401
     Communicator,
     make_communicator,
 )
-from repro.core.bsp import BSPRuntime, RunReport, SuperstepReport, WorkerFailure  # noqa: F401
+from repro.core.bsp import (  # noqa: F401
+    BSPRuntime,
+    Burst,
+    RunReport,
+    SuperstepReport,
+    WorkerFailure,
+)

@@ -109,6 +109,16 @@ _KIND_CLASS = {
 }
 
 
+def _as_channel(
+    channel: "netsim.ChannelModel | netsim.ProviderProfile",
+) -> netsim.ChannelModel:
+    """Accept a ProviderProfile anywhere a channel is priced: the autotuner
+    runs on the provider's direct channel (its punched-pair substrate)."""
+    if isinstance(channel, netsim.ProviderProfile):
+        return channel.direct
+    return channel
+
+
 def _rounds(world: int) -> int:
     return max(1, math.ceil(math.log2(world)))
 
@@ -211,8 +221,9 @@ def _staged_chunked(
     return best, best_k
 
 
-def algorithms_for(channel: netsim.ChannelModel, kind: str) -> tuple[str, ...]:
-    """Candidate schedule names for one (channel, kind)."""
+def algorithms_for(channel, kind: str) -> tuple[str, ...]:
+    """Candidate schedule names for one (channel-or-provider, kind)."""
+    channel = _as_channel(channel)
     klass = _KIND_CLASS[kind]
     if channel.staged:
         if klass == "barrier":
@@ -222,15 +233,17 @@ def algorithms_for(channel: netsim.ChannelModel, kind: str) -> tuple[str, ...]:
 
 
 def algorithm_time(
-    channel: netsim.ChannelModel,
+    channel,
     kind: str,
     world: int,
     nbytes: int,
     algorithm: str,
 ) -> float:
-    """Modeled seconds for one collective under one named schedule."""
+    """Modeled seconds for one collective under one named schedule
+    (``channel`` may be a :class:`netsim.ProviderProfile`)."""
     if world <= 1:
         return 0.0
+    channel = _as_channel(channel)
     klass = _KIND_CLASS[kind]
     if channel.staged:
         if algorithm == "staged":
@@ -307,16 +320,21 @@ def select_algorithm(
     kind: str,
     world: int,
     nbytes: int,
-    channel: netsim.ChannelModel,
+    channel,
     cache: DecisionCache | None = _GLOBAL_CACHE,
 ) -> Choice:
     """Cost-driven autotuner: min modeled time over every candidate schedule.
 
-    With a cache, the argmin is memoized per exact (kind, world, nbytes,
-    channel); pass ``cache=None`` to force a fresh evaluation.
+    ``channel`` is a :class:`netsim.ChannelModel` or a
+    :class:`netsim.ProviderProfile` (resolved to its direct channel, so a
+    decision cached for one provider is shared by every provider on the
+    same substrate).  With a cache, the argmin is memoized per exact
+    (kind, world, nbytes, channel); pass ``cache=None`` to force a fresh
+    evaluation.
     """
     if world <= 1:
         return Choice("none", 0.0)
+    channel = _as_channel(channel)
     nbytes = int(nbytes)
     if cache is not None:
         cached = cache.lookup(kind, world, nbytes, channel)
@@ -339,8 +357,9 @@ def _choice_for(name, channel, kind, world, nbytes) -> Choice:
     return Choice(name, algorithm_time(channel, kind, world, nbytes, name))
 
 
-def tuned_time(channel: netsim.ChannelModel, kind: str, world: int, nbytes: int) -> float:
-    """Min modeled time across schedules (the autotuned pricing path)."""
+def tuned_time(channel, kind: str, world: int, nbytes: int) -> float:
+    """Min modeled time across schedules (the autotuned pricing path);
+    ``channel`` may be a provider profile."""
     return select_algorithm(kind, world, nbytes, channel).time_s
 
 
@@ -357,17 +376,23 @@ class GroupLinks:
     pairs whose hole punch failed and whose traffic relays through a store
     (possibly a different store per pair).  ``fallback`` is the fabric's
     relay channel, used when routing the *whole* collective through one
-    store.  Hashable, so hybrid decisions memoize like direct ones.
+    store.  ``pair_direct`` holds (i, j, channel) triples for pairs that
+    punched on a *different* direct substrate than ``direct`` — same-provider
+    pairs of a burst group in a heterogeneous world — priced per-round like
+    direct pairs at their own alpha/beta (never staged channels; a staged
+    substrate belongs in ``relayed``).  Hashable, so hybrid decisions
+    memoize like direct ones.
     """
 
     world: int
     direct: netsim.ChannelModel
     relayed: tuple = ()
     fallback: netsim.ChannelModel = netsim.REDIS_STAGED
+    pair_direct: tuple = ()
 
     @property
     def all_direct(self) -> bool:
-        return not self.relayed
+        return not self.relayed and not self.pair_direct
 
     @property
     def fully_relayed(self) -> bool:
@@ -379,6 +404,10 @@ class GroupLinks:
 
     def relays_touching(self, rank: int) -> list:
         return [ch for (i, j, ch) in self.relayed if rank in (i, j)]
+
+    def directs_touching(self, rank: int) -> list:
+        """Direct-channel overrides on pairs touching ``rank``."""
+        return [ch for (i, j, ch) in self.pair_direct if rank in (i, j)]
 
 
 # Round structure per (kind-class, algorithm): (pair shape, number of rounds,
@@ -517,18 +546,28 @@ def hybrid_algorithm_time(
     a_eff = _alpha_eff(links.direct, world)
     beta = links.direct.beta_s_per_byte
     relay_of = {(i, j): ch for (i, j, ch) in links.relayed}
+    override_of = {(i, j): ch for (i, j, ch) in links.pair_direct}
     total = 0.0
     for idx in range(nrounds):
         pairs = _round_pairs(shape, idx, world, r)
         relay_bytes: dict[netsim.ChannelModel, float] = {}
+        override_chans: set[netsim.ChannelModel] = set()
         direct_active = not pairs  # a pure-latency round still pays alpha
         for pair in pairs:
             ch = relay_of.get(pair)
-            if ch is None:
-                direct_active = True
-            else:
+            if ch is not None:
                 relay_bytes[ch] = relay_bytes.get(ch, 0.0) + b_round
+                continue
+            och = override_of.get(pair)
+            if och is not None:
+                override_chans.add(och)
+            else:
+                direct_active = True
         t = a_eff + b_round * beta if direct_active else 0.0
+        for och in override_chans:
+            # override pairs run concurrently on their own substrate; the
+            # round is gated by the slowest participating link class
+            t = max(t, _alpha_eff(och, world) + b_round * och.beta_s_per_byte)
         for ch, tot in relay_bytes.items():
             t_relay = (2.0 * (ch.alpha_s + ch.store_alpha_s)
                        + 2.0 * tot * ch.beta_s_per_byte)
@@ -579,3 +618,123 @@ def select_hybrid(
             _HYBRID_CACHE.clear()
         _HYBRID_CACHE[key] = best
     return best
+
+
+# ---------------------------------------------------------------------------
+# Multi-provider topologies and cost-aware placement
+# ---------------------------------------------------------------------------
+
+
+def provider_links(rank_providers, relay=None) -> GroupLinks:
+    """Link topology for a world whose ranks live on different providers.
+
+    ``rank_providers`` maps local rank -> provider name/profile (a list or
+    tuple, one entry per rank).  Cross-provider pairs cannot hole-punch —
+    there is no shared rendezvous path through two NAT regimes — so they are
+    forced onto relay links (``relay`` if given, else the *base* provider's
+    relay channel; the base provider is rank 0's).  Same-provider pairs of a
+    non-base provider punch on their own direct substrate and appear as
+    ``pair_direct`` overrides — unless that provider's "direct" channel is
+    itself staged, in which case those pairs are relayed through it.
+    """
+    profiles = [netsim.get_provider(p) for p in rank_providers]
+    if not profiles:
+        raise ValueError("rank_providers must name at least one rank")
+    base = profiles[0]
+    relay_ch = _as_channel(relay) if relay is not None else base.relay_channel
+    if not relay_ch.staged:
+        raise ValueError(f"relay channel {relay_ch.name!r} is not a staged store")
+    world = len(profiles)
+    relayed, pair_direct = [], []
+    for i in range(world):
+        for j in range(i + 1, world):
+            pi, pj = profiles[i], profiles[j]
+            if pi.name != pj.name:
+                relayed.append((i, j, relay_ch))
+            elif pi.name != base.name:
+                if pi.direct.staged:
+                    relayed.append((i, j, pi.direct))
+                else:
+                    pair_direct.append((i, j, pi.direct))
+    return GroupLinks(
+        world,
+        base.direct,
+        tuple(relayed),
+        relay_ch,
+        tuple(pair_direct),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A BSP job's resource shape, provider-agnostic.
+
+    ``compute_s`` is single-superstep-summed compute time at cpu_speed 1.0
+    (scaled by each candidate's relative core speed).  ``collectives`` is a
+    tuple of (kind, bytes_per_rank, count) triples covering the whole run.
+    """
+
+    world: int
+    compute_s: float
+    collectives: tuple = ()
+    mem_gb: float = 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One provider's priced bid for a workload."""
+
+    provider: str
+    time_s: float
+    cost_usd: float
+    feasible: bool
+    init_s: float
+    compute_s: float
+    comm_s: float
+
+
+def placement_candidates(workload: Workload, providers) -> list[Placement]:
+    """Price ``workload`` on every candidate provider (no deadline filter).
+
+    time = bootstrap (incl. expected NAT-blocked-pair mailbox setup)
+         + compute / cpu_speed + tuned collective time on the direct channel;
+    cost = world * per-rank invocation cost for that wall time.
+    """
+    out = []
+    for prov in providers:
+        p = netsim.get_provider(prov)
+        world = workload.world
+        init = p.bootstrap_time(world)
+        if p.nat_blocked_rate > 0.0 and world > 1:
+            npairs = world * (world - 1) // 2
+            relay = p.relay_channel
+            per_obj = relay.alpha_s + relay.store_alpha_s
+            init += p.nat_blocked_rate * npairs * 2.0 * per_obj
+        compute = workload.compute_s / p.platform.cpu_speed
+        comm = sum(
+            count * tuned_time(p.direct, kind, world, nbytes)
+            for (kind, nbytes, count) in workload.collectives
+        )
+        total = init + compute + comm
+        cost = world * p.invocation_cost(workload.mem_gb, total)
+        out.append(Placement(p.name, total, cost, True, init, compute, comm))
+    return out
+
+
+def select_placement(workload: Workload, providers, deadline_s: float) -> Placement:
+    """Cheapest provider whose modeled makespan meets the deadline.
+
+    Among providers with ``time_s <= deadline_s`` the minimum-cost one wins
+    (ties broken by time).  Feasible-set growth makes the result monotone in
+    the deadline: loosening it can only add candidates, never raise the
+    winning cost.  If NO provider meets the deadline the fastest one is
+    returned with ``feasible=False`` — callers gate on that flag.
+    """
+    bids = placement_candidates(workload, providers)
+    if not bids:
+        raise ValueError("providers must name at least one candidate")
+    feasible = [b for b in bids if b.time_s <= deadline_s]
+    if feasible:
+        return min(feasible, key=lambda b: (b.cost_usd, b.time_s))
+    fastest = min(bids, key=lambda b: b.time_s)
+    return dataclasses.replace(fastest, feasible=False)

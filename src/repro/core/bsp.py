@@ -59,10 +59,12 @@ class SuperstepReport:
     retries: int              # rank re-executions (stragglers / failures)
     barrier_s: float
     rebootstrap_s: float = 0.0  # deadline-killed ranks re-joining the session
+    expand_s: float = 0.0       # burst admission before this superstep ran
 
     @property
     def total_s(self) -> float:
-        return self.compute_s + self.comm_s + self.barrier_s + self.rebootstrap_s
+        return (self.compute_s + self.comm_s + self.barrier_s
+                + self.rebootstrap_s + self.expand_s)
 
 
 @dataclasses.dataclass
@@ -70,10 +72,28 @@ class RunReport:
     init_s: float
     supersteps: list[SuperstepReport]
     world: int
+    # rank -> superstep index at which it joined (absent == rank 0's cohort);
+    # the heterogeneous cost model bills each rank from its join point
+    joined_at: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_s(self) -> float:
         return self.init_s + sum(s.total_s for s in self.supersteps)
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    """A mid-run traffic burst absorbed by admitting workers between
+    supersteps: before superstep ``at_step`` runs, ``new_ranks`` workers
+    (optionally from another ``provider``) join through
+    :meth:`~repro.core.session.CommSession.expand`.  ``repartition(states,
+    new_world)`` rebuilds per-rank state for the grown world; without one the
+    new ranks start from ``None`` state."""
+
+    at_step: int
+    new_ranks: int
+    provider: str | None = None
+    repartition: Callable[[list[Any], int], list[Any]] | None = None
 
 
 class BSPRuntime:
@@ -171,6 +191,38 @@ class BSPRuntime:
             return None
         return pickle.loads(store.get_object(max(groups), "states.pkl"))
 
+    # -- elastic membership ---------------------------------------------------
+
+    def expand(
+        self,
+        new_ranks: int,
+        provider: str | None = None,
+        states: list[Any] | None = None,
+        repartition: Callable[[list[Any], int], list[Any]] | None = None,
+    ) -> tuple[list[Any] | None, float]:
+        """Admit ``new_ranks`` workers into the live run (burst absorption).
+
+        Grows the session world through the incremental expand path (priced
+        ``expand_*`` BOOTSTRAP events — compare
+        ``session.full_rebootstrap_time_s()``), rebuilds the root
+        communicator over the new world, and repartitions ``states`` if
+        given.  Returns ``(new_states, expand_seconds)``.
+        """
+        expand_s = self.session.expand(new_ranks, provider=provider)
+        self.world = self.session.world
+        self.comm = Communicator(
+            channel=self.comm.channel, algorithm=self.algorithm,
+            session=self.session,
+        )
+        if states is not None:
+            if repartition is not None:
+                states = repartition(list(states), self.world)
+                if len(states) != self.world:
+                    raise ValueError("repartition returned wrong number of states")
+            else:
+                states = list(states) + [None] * int(new_ranks)
+        return states, expand_s
+
     # -- execution ------------------------------------------------------------
 
     def run(
@@ -181,6 +233,7 @@ class BSPRuntime:
         straggle_injector: Callable[[int, int], float] | None = None,
         resume_from: dict | None = None,
         max_retries: int = 2,
+        burst: Burst | None = None,
     ) -> tuple[list[Any], RunReport]:
         """Execute `supersteps` over per-rank `init_states`.
 
@@ -188,6 +241,9 @@ class BSPRuntime:
         attempt of that step (it is retried, serverless-style re-invocation).
         straggle_injector(step, rank) -> extra seconds of simulated delay; a
         rank whose simulated time exceeds `deadline_s` is killed and retried.
+        ``burst`` admits extra workers before superstep ``burst.at_step``
+        runs; a run resumed *past* that step must already be at the expanded
+        world (the checkpoint recorded it), so the burst is skipped.
         """
         if len(init_states) != self.world:
             raise ValueError("need one init state per rank")
@@ -204,9 +260,19 @@ class BSPRuntime:
         # PlatformModel.init_time closed form on an all-direct fabric)
         init_s = self.session.bootstrap_time_s
         reports: list[SuperstepReport] = []
+        joined_at: dict = {}
 
         for idx in range(start_step, len(supersteps)):
             name, fn = supersteps[idx]
+            expand_s = 0.0
+            if burst is not None and idx == burst.at_step:
+                old_world = self.world
+                states, expand_s = self.expand(
+                    burst.new_ranks, provider=burst.provider,
+                    states=states, repartition=burst.repartition,
+                )
+                for r in range(old_world, self.world):
+                    joined_at[r] = idx
             self.comm.reset_events()
             max_rank_s = 0.0
             retries = 0
@@ -261,13 +327,13 @@ class BSPRuntime:
             reports.append(
                 SuperstepReport(
                     idx, name, max_rank_s, comm_s, retries, barrier_s,
-                    rebootstrap_s=reboot_s,
+                    rebootstrap_s=reboot_s, expand_s=expand_s,
                 )
             )
             self._save(idx, states)
             self._completed_steps = idx + 1
 
-        return states, RunReport(init_s, reports, self.world)
+        return states, RunReport(init_s, reports, self.world, joined_at=joined_at)
 
 
 def resize_checkpoint(

@@ -77,6 +77,16 @@ the table above applies unchanged.  When some pairs could not be punched
                     that wins.
     fully relayed   no direct links exist: the staged engine on the relay
                     channel IS the price (never below pure-mediated).
+    cross-provider  a burst group admitted from another provider (see
+    (expanded       ``CommSession.expand``) cannot hole-punch across the
+    world)          provider boundary: every cross-provider pair relays as
+                    above, while same-provider pairs of the joining group
+                    keep their own direct substrate — priced per round as
+                    concurrent direct links at *their* alpha/beta
+                    (``GroupLinks.pair_direct``), so a sub-communicator
+                    split along the provider boundary prices all-direct on
+                    its own channel and only boundary-crossing groups pay
+                    the relay.
 
 ``CommEvent.relay`` records the relay channel(s) and
 ``CommEvent.relayed_pairs`` the failed-pair count, so hybrid rounds stay
@@ -275,8 +285,17 @@ class Communicator:
                 t = worst.point_to_point_time(int(bytes_per_rank))
                 algo_name, relay_name = "p2p@relay", worst.name
             else:
+                # a peer in a cross-provider burst group may sit on its own
+                # direct substrate — price at the slowest direct touching it
+                ch = self.channel
+                dchans = links.directs_touching(self._local(peer))
+                if dchans:
+                    ch = max(
+                        dchans + [ch],
+                        key=lambda c: c.point_to_point_time(int(bytes_per_rank)),
+                    )
                 t = _algorithms.algorithm_time(
-                    self.channel, "p2p", self.world_size, bytes_per_rank, "direct"
+                    ch, "p2p", self.world_size, bytes_per_rank, "direct"
                 )
                 algo_name = "direct"
         else:

@@ -155,6 +155,50 @@ def join_cost(
     )
 
 
+def heterogeneous_run_cost(
+    report,
+    session,
+    *,
+    mem_gb: float = 10.0,
+    default_provider: str = "aws-lambda",
+) -> dict:
+    """Price a BSP run whose ranks live on different providers (burst runs).
+
+    Each rank is billed at ITS provider's per-GB-s and per-request rates
+    (``netsim.ProviderProfile.invocation_cost``) for the wall time from its
+    join point — a rank admitted by a burst before superstep k pays nothing
+    for supersteps 0..k-1 or the initial bootstrap.  ``report`` is a
+    :class:`repro.core.bsp.RunReport` (``joined_at`` maps burst ranks to
+    their join step); ``session`` supplies per-rank providers
+    (``CommSession.rank_providers``, ``default_provider`` standing in for
+    pre-registry fabrics).  Returns ``{"total_usd", "per_rank_usd",
+    "per_provider_usd"}``.
+    """
+    from repro.core import netsim
+
+    step_total = {s.index: s.total_s for s in report.supersteps}
+    per_rank: list[float] = []
+    per_provider: dict[str, float] = {}
+    for rank in range(report.world):
+        name = None
+        if rank < len(session.rank_providers):
+            name = session.rank_providers[rank]
+        prov = netsim.get_provider(name or default_provider)
+        joined = report.joined_at.get(rank)
+        if joined is None:
+            wall = report.init_s + sum(step_total.values())
+        else:
+            wall = sum(t for i, t in step_total.items() if i >= joined)
+        cost = prov.invocation_cost(mem_gb, wall)
+        per_rank.append(cost)
+        per_provider[prov.name] = per_provider.get(prov.name, 0.0) + cost
+    return {
+        "total_usd": sum(per_rank),
+        "per_rank_usd": per_rank,
+        "per_provider_usd": per_provider,
+    }
+
+
 def ec2_cost(workers: int, wall_s: float, *, xlarge: bool = True, idle_fraction: float = 0.0) -> float:
     """Provisioned-VM cost for the same job; `idle_fraction` models the
     intermittent-workload idle time the paper argues dominates (§I C-iii)."""

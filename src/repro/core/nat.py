@@ -72,6 +72,17 @@ class RendezvousServer:
         self._locks_held.clear()
         self.cleared = True
 
+    def grow(self, extra: int) -> None:
+        """Raise the expected world so new workers can register mid-run.
+
+        Burst expansion is NOT the §III-D stale-metadata hazard: the live
+        namespace stays valid, the admission bound just moves.  Without this,
+        the (expected+1)-th ``assign_rank`` poisons the namespace.
+        """
+        if extra < 1:
+            raise ValueError("extra must be >= 1")
+        self.expected_world += int(extra)
+
     def reassign_rank(self, rank: int, internal_addr: str) -> str:
         """Re-register a re-invoked worker in its existing slot.
 

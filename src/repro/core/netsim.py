@@ -77,15 +77,6 @@ S3_STAGED = ChannelModel(
     "s3", alpha_s=10e-3, beta_s_per_byte=1.0 / 450e6, staged=True, store_alpha_s=20e-3
 )
 
-CHANNELS = {
-    "direct": LAMBDA_DIRECT,
-    "ec2-direct": EC2_DIRECT,
-    "hpc-direct": HPC_DIRECT,
-    "redis": REDIS_STAGED,
-    "s3": S3_STAGED,
-}
-
-
 # ---------------------------------------------------------------------------
 # Platform models — paper Table I infrastructure
 # ---------------------------------------------------------------------------
@@ -144,9 +135,188 @@ RIVANNA_6GB = PlatformModel(
     init_per_level_s=0.05, init_base_s=0.3, sched_jitter_s=0.28,
 )
 
+# ---------------------------------------------------------------------------
+# Provider fabric registry
+# ---------------------------------------------------------------------------
+#
+# The calibrated constants above answer "Lambda vs EC2 on AWS".  A
+# ProviderProfile packages one provider's whole offer — direct channel,
+# staged channels, compute/request prices, bootstrap parameters, NAT
+# behavior — as *data*, so the placement engine
+# (``algorithms.select_placement``) and the session layer
+# (``CommSession.expand(provider=...)``) can reason across clouds.  The
+# registry is seeded from the calibrated AWS presets; CHANNELS/PLATFORMS
+# below stay thin views over those entries so every paper-figure test keeps
+# pricing against the identical objects.
+
+
+def mediated_bootstrap_time(channel: ChannelModel, world: int) -> float:
+    """Bootstrap through a store rendezvous (no hole punching).
+
+    Each worker INCRs the atomic rank counter, writes its metadata record,
+    reads the peer table, and confirms membership (~4 store round trips,
+    concurrent across workers), then polls a tree-depth's worth of rounds
+    until the full world has registered — the same log2-depth convergence
+    the staged barrier pays.  Lives here (the lowest layer) so both the
+    session lifecycle and the placement engine price it without an import
+    cycle; re-exported by ``repro.core.session`` for compatibility.
+    """
+    if world < 1:
+        raise ValueError("world must be >= 1")
+    per_obj = channel.alpha_s + channel.store_alpha_s
+    levels = max(0, math.ceil(math.log2(world))) if world > 1 else 0
+    return 4.0 * per_obj + 2.0 * per_obj * levels
+
+
+@dataclasses.dataclass(frozen=True)
+class ProviderProfile:
+    """One compute provider: channels, prices, and bootstrap behavior.
+
+    ``platform`` carries the rendezvous/bootstrap parameters (per-level
+    punch cost, base startup — for ``hpc`` kinds the base models batch-queue
+    wait) and the relative CPU speed; ``direct`` is the peer-to-peer channel
+    hole-punched pairs use; ``staged`` lists the provider's store channels;
+    ``relay`` is the default mediated fallback for pairs that cannot be
+    punched (cross-provider pairs, symmetric NAT).  ``nat_blocked_rate`` is
+    the fraction of pairs whose hole punch fails *permanently* on this
+    provider's network (0 on AWS per the paper; stricter NATs relay more).
+    Prices follow the serverless GB-second + per-request shape; serverful
+    providers express their hourly rate as an equivalent GB-second rate with
+    ``usd_per_request = 0``.
+    """
+
+    name: str
+    kind: str                                  # "serverless" | "serverful" | "hpc"
+    platform: PlatformModel
+    direct: ChannelModel
+    staged: tuple[ChannelModel, ...] = ()
+    relay: ChannelModel | None = None
+    usd_per_gb_s: float = 0.0
+    usd_per_request: float = 0.0
+    nat_blocked_rate: float = 0.0
+
+    @property
+    def relay_channel(self) -> ChannelModel:
+        ch = self.relay or (self.staged[0] if self.staged else None)
+        if ch is None:
+            raise ValueError(f"provider {self.name!r} has no relay/staged channel")
+        return ch
+
+    def bootstrap_time(self, world: int) -> float:
+        """Cold-bootstrap seconds for a world on this provider: the NAT
+        lifecycle closed form for punched fabrics, the store rendezvous for
+        staged direct channels."""
+        if self.direct.staged:
+            return mediated_bootstrap_time(self.direct, world)
+        return self.platform.init_time(world)
+
+    def invocation_cost(self, mem_gb: float, duration_s: float) -> float:
+        """One worker's cost for ``duration_s`` seconds at ``mem_gb``."""
+        return mem_gb * duration_s * self.usd_per_gb_s + self.usd_per_request
+
+
+_PROVIDERS: dict[str, ProviderProfile] = {}
+
+
+def register_provider(profile: ProviderProfile, overwrite: bool = False) -> ProviderProfile:
+    """Add a provider to the registry (``overwrite=False`` protects the
+    calibrated presets from accidental shadowing)."""
+    if not overwrite and profile.name in _PROVIDERS:
+        raise ValueError(f"provider {profile.name!r} already registered")
+    _PROVIDERS[profile.name] = profile
+    return profile
+
+
+def get_provider(name: str | ProviderProfile) -> ProviderProfile:
+    """Look up a registered provider (profiles pass through unchanged)."""
+    if isinstance(name, ProviderProfile):
+        return name
+    try:
+        return _PROVIDERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown provider {name!r}; registered: {sorted(_PROVIDERS)}"
+        ) from None
+
+
+def providers() -> tuple[str, ...]:
+    return tuple(sorted(_PROVIDERS))
+
+
+# -- calibrated AWS seeds (prices: public us-east-1 list, matching
+#    cost_model.py constants) ------------------------------------------------
+
+AWS_LAMBDA = register_provider(ProviderProfile(
+    name="aws-lambda", kind="serverless", platform=LAMBDA_10GB,
+    direct=LAMBDA_DIRECT, staged=(REDIS_STAGED, S3_STAGED), relay=REDIS_STAGED,
+    usd_per_gb_s=0.0000166667, usd_per_request=0.20 / 1e6,
+    nat_blocked_rate=0.0,  # the paper achieved full traversal on Lambda
+))
+AWS_EC2 = register_provider(ProviderProfile(
+    name="aws-ec2", kind="serverful", platform=EC2_XL,
+    direct=EC2_DIRECT, staged=(REDIS_STAGED, S3_STAGED), relay=REDIS_STAGED,
+    # m3.xlarge $0.266/hr over 15 GB => equivalent GB-second rate
+    usd_per_gb_s=0.266 / 3600.0 / 15.0, usd_per_request=0.0,
+    nat_blocked_rate=0.0,  # placement group: no NAT between instances
+))
+
+# -- non-AWS presets ----------------------------------------------------------
+
+# Cloud Run-style container serverless: gen2 cold starts are faster than the
+# paper's Lambda runtime (per-level ~3.2 s vs 6.3 s) but its NAT is stricter
+# (direct-VPC egress is optional), so a fraction of pairs never punch and
+# relay through the memorystore channel.  Pricing: vCPU-s + GiB-s folded
+# into one GB-second rate (~4 vCPU / 10 GiB shape), per-request $0.40/M.
+CLOUDRUN_DIRECT = ChannelModel("direct", alpha_s=1.2e-3, beta_s_per_byte=1.0 / 500e6)
+CLOUDRUN_10GB = PlatformModel(
+    "cloudrun-10gb", cpu_speed=1.00, cores=4, mem_gb=10.0, channel=CLOUDRUN_DIRECT,
+    init_per_level_s=3.2, init_base_s=0.5, sched_jitter_s=0.9,
+)
+GCP_CLOUDRUN = register_provider(ProviderProfile(
+    name="gcp-cloudrun", kind="serverless", platform=CLOUDRUN_10GB,
+    direct=CLOUDRUN_DIRECT, staged=(REDIS_STAGED,), relay=REDIS_STAGED,
+    usd_per_gb_s=0.0000121, usd_per_request=0.40 / 1e6,
+    nat_blocked_rate=0.05,
+))
+
+# Slurm-style HPC allocation: Rivanna-class interconnect and CPUs, near-zero
+# per-level punch cost, but the *base* startup is the batch-queue wait — the
+# cost-aware placer should only send work there when the deadline absorbs
+# it.  Pricing: ~$0.10 per node-hour allocation over a 10 GB job slot.
+SLURM_CPU = PlatformModel(
+    "hpc-slurm-10gb", cpu_speed=1.40, cores=4, mem_gb=10.0, channel=HPC_DIRECT,
+    init_per_level_s=0.05, init_base_s=45.0, sched_jitter_s=0.28,
+)
+HPC_SLURM = register_provider(ProviderProfile(
+    name="hpc-slurm", kind="hpc", platform=SLURM_CPU,
+    direct=HPC_DIRECT, staged=(REDIS_STAGED,), relay=REDIS_STAGED,
+    usd_per_gb_s=0.10 / 3600.0 / 10.0, usd_per_request=0.0,
+    nat_blocked_rate=0.0,
+))
+
+
+# ---------------------------------------------------------------------------
+# Thin compat views over the registry
+# ---------------------------------------------------------------------------
+#
+# The historical dicts every calibrated test and benchmark keys on.  They
+# alias the registry's seeded entries (plus the Table I size variants that
+# have no separate provider), so the calibration cannot fork from the
+# registry: the paper-figure tests and ``select_placement`` price the
+# identical ChannelModel / PlatformModel objects.
+
+CHANNELS = {
+    "direct": AWS_LAMBDA.direct,
+    "ec2-direct": AWS_EC2.direct,
+    "hpc-direct": HPC_SLURM.direct,
+    "redis": AWS_LAMBDA.staged[0],
+    "s3": AWS_LAMBDA.staged[1],
+}
+
 PLATFORMS = {
     p.name: p
-    for p in (EC2_XL, EC2_L, LAMBDA_10GB, LAMBDA_6GB, RIVANNA_10GB, RIVANNA_6GB)
+    for p in (AWS_EC2.platform, EC2_L, AWS_LAMBDA.platform, LAMBDA_6GB,
+              RIVANNA_10GB, RIVANNA_6GB)
 }
 
 

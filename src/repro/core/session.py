@@ -63,7 +63,11 @@ class Fabric:
     are pair-wise symmetric-NAT / partition cases, ``blocked_ranks`` are
     workers behind a fully symmetric NAT (every link to them relays).
     ``punch_fail_prob`` adds *transient* socket failures that succeed on
-    retry (paper §VI), priced into the punch-level events.
+    retry (paper §VI), priced into the punch-level events.  ``blocked_rate``
+    is a provider-level expectation — that fraction of all pairs is sampled
+    (deterministically, from ``seed``) as permanently blocked, on top of any
+    explicitly configured pairs/ranks.  ``provider`` records which registry
+    entry this fabric was derived from, if any (per-rank pricing reads it).
     """
 
     platform: netsim.PlatformModel = netsim.LAMBDA_10GB
@@ -74,13 +78,16 @@ class Fabric:
     punch_fail_prob: float = 0.0
     max_retries: int = 3
     seed: int = 0
+    blocked_rate: float = 0.0
+    provider: str | None = None
 
     @property
     def direct_channel(self) -> netsim.ChannelModel:
         return self.direct or self.platform.channel
 
     def blocked_set(self, world: int) -> frozenset:
-        """Normalized (a < b) blocked pairs, expanding blocked ranks."""
+        """Normalized (a < b) blocked pairs, expanding blocked ranks and
+        sampling ``blocked_rate`` of all pairs deterministically."""
         pairs = set()
         for p in self.blocked_pairs:
             a, b = sorted(int(x) for x in p)
@@ -93,6 +100,15 @@ class Fabric:
             for o in range(world):
                 if o != r:
                     pairs.add(tuple(sorted((int(r), o))))
+        if self.blocked_rate > 0.0 and world > 1:
+            import numpy as np
+
+            all_pairs = [(a, b) for a in range(world) for b in range(a + 1, world)]
+            k = round(self.blocked_rate * len(all_pairs))
+            if k:
+                rng = np.random.default_rng(self.seed)
+                idx = rng.choice(len(all_pairs), size=int(k), replace=False)
+                pairs.update(all_pairs[int(i)] for i in idx)
         return frozenset(pairs)
 
 
@@ -107,21 +123,22 @@ FABRICS = {
 }
 
 
-def mediated_bootstrap_time(channel: netsim.ChannelModel, world: int) -> float:
-    """Bootstrap through a store rendezvous (no hole punching).
+# canonical definition moved down to netsim (the provider registry prices
+# bootstrap with it); re-exported here because the session owns the lifecycle
+mediated_bootstrap_time = netsim.mediated_bootstrap_time
 
-    Each worker INCRs the atomic rank counter, writes its metadata record,
-    reads the peer table, and confirms membership (~4 store round trips,
-    concurrent across workers), then polls a tree-depth's worth of rounds
-    until the full world has registered — the same log2-depth convergence
-    the staged barrier pays.  Replaces the hard-coded 1.0 s the cost model
-    used to charge for non-direct channels.
-    """
-    if world < 1:
-        raise ValueError("world must be >= 1")
-    per_obj = channel.alpha_s + channel.store_alpha_s
-    levels = max(0, math.ceil(math.log2(world))) if world > 1 else 0
-    return 4.0 * per_obj + 2.0 * per_obj * levels
+
+def provider_fabric(name: str | netsim.ProviderProfile) -> Fabric:
+    """Fabric for a registered provider: its platform, direct channel, relay,
+    and expected NAT-blocked-pair rate."""
+    p = netsim.get_provider(name)
+    return Fabric(
+        platform=p.platform,
+        direct=p.direct,
+        relay=p.relay_channel,
+        blocked_rate=p.nat_blocked_rate,
+        provider=p.name,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +162,8 @@ class LinkMap:
     Direct pairs share ``direct``; relayed pairs carry their own (possibly
     heterogeneous) store channel.  ``fallback`` is the fabric's relay — the
     store the engine routes *everything* through when no direct link exists.
+    ``overrides`` carries per-pair *direct* channels that differ from the
+    base (same-provider pairs of a burst group in a heterogeneous world).
     """
 
     def __init__(
@@ -153,6 +172,7 @@ class LinkMap:
         direct: netsim.ChannelModel,
         relays: dict | None = None,
         fallback: netsim.ChannelModel = netsim.REDIS_STAGED,
+        overrides: dict | None = None,
     ):
         self.world = int(world)
         self.direct = direct
@@ -160,12 +180,15 @@ class LinkMap:
             tuple(sorted(p)): ch for p, ch in (relays or {}).items()
         }
         self.fallback = fallback
+        self._overrides = {
+            tuple(sorted(p)): ch for p, ch in (overrides or {}).items()
+        }
 
     def link(self, a: int, b: int) -> Link:
         a, b = sorted((int(a), int(b)))
         ch = self._relays.get((a, b))
         if ch is None:
-            return Link(a, b, self.direct, relayed=False)
+            return Link(a, b, self._overrides.get((a, b), self.direct), relayed=False)
         return Link(a, b, ch, relayed=True)
 
     def is_relayed(self, a: int, b: int) -> bool:
@@ -173,10 +196,13 @@ class LinkMap:
 
     @property
     def all_direct(self) -> bool:
-        return not self._relays
+        return not self._relays and not self._overrides
 
     def relayed_pairs(self) -> tuple:
         return tuple(sorted(self._relays))
+
+    def override_pairs(self) -> tuple:
+        return tuple(sorted(self._overrides))
 
     def group_links(self, group: tuple) -> algorithms.GroupLinks:
         """Link view for a sub-group, relabeled to local ranks.
@@ -191,11 +217,17 @@ class LinkMap:
             if a in idx and b in idx:
                 i, j = sorted((idx[a], idx[b]))
                 relayed.append((i, j, ch))
+        pair_direct = []
+        for (a, b), ch in sorted(self._overrides.items()):
+            if a in idx and b in idx:
+                i, j = sorted((idx[a], idx[b]))
+                pair_direct.append((i, j, ch))
         return algorithms.GroupLinks(
             world=len(group),
             direct=self.direct,
             relayed=tuple(relayed),
             fallback=self.fallback,
+            pair_direct=tuple(pair_direct),
         )
 
 
@@ -223,6 +255,10 @@ class CommSession:
         self.fabric = fabric
         self.server = server
         self.events: list[CommEvent] = events if events is not None else []
+        # per-rank provider names (None for pre-registry fabrics); expand()
+        # appends to this as it grows the world
+        base = fabric.provider if fabric is not None else None
+        self.rank_providers: list[str | None] = [base] * self.world
 
     # -- construction ---------------------------------------------------------
 
@@ -263,12 +299,16 @@ class CommSession:
         from repro.core.communicator import CollectiveKind, CommEvent
 
         if isinstance(fabric, str):
-            try:
+            if fabric in FABRICS:
                 fabric = FABRICS[fabric]
-            except KeyError:
-                raise ValueError(
-                    f"unknown fabric {fabric!r}; options: {sorted(FABRICS)}"
-                ) from None
+            else:
+                try:
+                    fabric = provider_fabric(fabric)
+                except ValueError:
+                    raise ValueError(
+                        f"unknown fabric {fabric!r}; options: {sorted(FABRICS)} "
+                        f"or a registered provider {sorted(netsim.providers())}"
+                    ) from None
         direct = fabric.direct_channel
         server = server or nat.RendezvousServer(world)
         events: list[CommEvent] = []
@@ -342,13 +382,13 @@ class CommSession:
 
     @property
     def bootstrap_time_s(self) -> float:
-        """Priced initial bootstrap (excludes per-rank re-bootstraps)."""
+        """Priced initial bootstrap (excludes re-bootstraps and expands)."""
         from repro.core.communicator import CollectiveKind
 
         return float(sum(
             e.time_s for e in self.events
             if e.kind == CollectiveKind.BOOTSTRAP
-            and not e.algo.startswith("rebootstrap")
+            and not e.algo.startswith(("rebootstrap", "expand"))
         ))
 
     @property
@@ -359,6 +399,17 @@ class CommSession:
             e.time_s for e in self.events
             if e.kind == CollectiveKind.BOOTSTRAP
             and e.algo.startswith("rebootstrap")
+        ))
+
+    @property
+    def expand_time_s(self) -> float:
+        """Sum of every priced ``expand_*`` event (all expansions so far)."""
+        from repro.core.communicator import CollectiveKind
+
+        return float(sum(
+            e.time_s for e in self.events
+            if e.kind == CollectiveKind.BOOTSTRAP
+            and e.algo.startswith("expand")
         ))
 
     def reset_events(self, keep_bootstrap: bool = True) -> None:
@@ -410,6 +461,184 @@ class CommSession:
         self.events.append(CommEvent(
             CollectiveKind.BOOTSTRAP, self.world, 0, t, algo=f"rebootstrap_r{int(rank)}",
         ))
+        return t
+
+    def expand(
+        self,
+        new_ranks: int,
+        provider: str | netsim.ProviderProfile | None = None,
+    ) -> float:
+        """Grow the world by ``new_ranks`` workers without a full re-bootstrap.
+
+        Cold bootstrap pays one punch event per binomial-tree *level* because
+        each level gates on peers that registered one level earlier.  An
+        expansion joins a **live** world: the rendezvous server is warm and
+        the core's NAT table is complete, so the join collapses to
+
+        1. ``expand_rendezvous`` — the joining ranks register (atomic rank
+           assignment against the grown bound; the joining platform's
+           ``init_base_s``);
+        2. ``expand_punch_core`` — every new<->core pair punches
+           *concurrently* (all peer mappings are already published): one
+           ``init_per_level_s`` of the joining platform;
+        3. ``expand_punch_new`` — new<->new pairs punch among themselves
+           (their mappings appeared in step 1): one more level, only when
+           more than one rank joins;
+        4. ``expand_relay_fallback`` — pairs that cannot punch register relay
+           mailboxes: every cross-provider pair (no shared rendezvous path
+           through two NAT regimes) plus the joining provider's expected
+           NAT-blocked fraction of the punchable pairs.
+
+        A staged joining substrate skips the punch waves entirely — the new
+        ranks converge through their store (``expand_store_rendezvous``) and
+        every pair touching them relays.  Cross-provider pairs land in the
+        ``LinkMap`` as relays; same-provider pairs of a *different* provider
+        than the base keep their own direct channel as per-pair overrides.
+        Returns the summed modeled seconds (compare
+        :meth:`full_rebootstrap_time_s`).
+        """
+        import numpy as np
+
+        from repro.core.communicator import CollectiveKind, CommEvent
+
+        k = int(new_ranks)
+        if k < 1:
+            raise ValueError("new_ranks must be >= 1")
+        if self.fabric is None or self.server is None:
+            raise ValueError(
+                "implicit all-direct sessions have no bootstrap lifecycle to "
+                "extend; use CommSession.bootstrap(...) first"
+            )
+        if provider is None:
+            join_fabric = self.fabric
+        else:
+            join_fabric = provider_fabric(provider)
+        join_name = join_fabric.provider
+        base_name = self.fabric.provider
+        cross = (
+            provider is not None
+            and (join_name != base_name or base_name is None)
+        )
+        join_direct = join_fabric.direct_channel
+        old_world = self.world
+        new_world = old_world + k
+
+        # 1. registration against the grown admission bound (warm server)
+        self.server.grow(k)
+        for w in range(old_world, new_world):
+            self.server.assign_rank(f"10.0.0.{w}")
+
+        total = 0.0
+
+        def emit(t, algo, **kw):
+            nonlocal total
+            total += t
+            self.events.append(CommEvent(
+                CollectiveKind.BOOTSTRAP, new_world, 0, t, algo=algo, **kw,
+            ))
+
+        core_pairs = [
+            tuple(sorted((c, n)))
+            for c in range(old_world) for n in range(old_world, new_world)
+        ]
+        new_pairs = [
+            (a, b)
+            for a in range(old_world, new_world)
+            for b in range(a + 1, new_world)
+        ]
+
+        relays = dict.fromkeys(self.link_map.relayed_pairs())
+        for p in self.link_map.relayed_pairs():
+            relays[p] = self.link_map.link(*p).channel
+        overrides = {
+            p: self.link_map.link(*p).channel
+            for p in self.link_map.override_pairs()
+        }
+
+        if join_direct.staged:
+            # store-rendezvous join: nothing to punch, every new link relays
+            emit(
+                mediated_bootstrap_time(join_direct, max(2, k)),
+                "expand_store_rendezvous",
+            )
+            for p in core_pairs + new_pairs:
+                relays[p] = join_direct
+        else:
+            emit(join_fabric.platform.init_base_s, "expand_rendezvous")
+            punchable = []
+            if cross:
+                # cross-provider core<->new pairs cannot punch at all
+                pass
+            else:
+                punchable += core_pairs
+            punchable += new_pairs
+            blocked: set = set()
+            if join_fabric.blocked_rate > 0.0 and punchable:
+                rng = np.random.default_rng(join_fabric.seed + old_world)
+                nb = round(join_fabric.blocked_rate * len(punchable))
+                if nb:
+                    idx = rng.choice(len(punchable), size=int(nb), replace=False)
+                    blocked = {punchable[int(i)] for i in idx}
+            if not cross:
+                emit(join_fabric.platform.init_per_level_s, "expand_punch_core")
+            if k > 1:
+                emit(join_fabric.platform.init_per_level_s, "expand_punch_new")
+            relay_pairs = set(blocked)
+            if cross:
+                relay_pairs.update(core_pairs)
+            if relay_pairs:
+                relay_ch = join_fabric.relay
+                per_obj = relay_ch.alpha_s + relay_ch.store_alpha_s
+                emit(
+                    len(relay_pairs) * 2.0 * per_obj,
+                    "expand_relay_fallback",
+                    relay=relay_ch.name,
+                    relayed_pairs=len(relay_pairs),
+                )
+                for p in relay_pairs:
+                    relays[p] = relay_ch
+            if join_direct != self.link_map.direct:
+                for p in new_pairs:
+                    if p not in relays:
+                        overrides[p] = join_direct
+
+        self.link_map = LinkMap(
+            new_world,
+            self.link_map.direct,
+            relays,
+            self.link_map.fallback,
+            overrides,
+        )
+        self.world = new_world
+        self.rank_providers.extend([join_name] * k)
+        return total
+
+    def full_rebootstrap_time_s(self) -> float:
+        """Modeled cost of a cold bootstrap of the *current* world — what an
+        expansion avoids.  For a heterogeneous world every registration wave
+        gates on the slowest member platform: base = max ``init_base_s``,
+        each of the ceil(log2 P) punch levels = max ``init_per_level_s``,
+        plus the mailbox registration of every currently-relayed pair.
+        """
+        if self.fabric is None:
+            return 0.0
+        platforms = []
+        for name in self.rank_providers:
+            if name is None:
+                platforms.append(self.fabric.platform)
+            else:
+                platforms.append(netsim.get_provider(name).platform)
+        direct = self.fabric.direct_channel
+        if direct.staged:
+            t = mediated_bootstrap_time(direct, self.world)
+        else:
+            base = max(p.init_base_s for p in platforms)
+            per_level = max(p.init_per_level_s for p in platforms)
+            levels = max(0, math.ceil(math.log2(self.world))) if self.world > 1 else 0
+            t = base + levels * per_level
+        for a, b in self.link_map.relayed_pairs():
+            ch = self.link_map.link(a, b).channel
+            t += 2.0 * (ch.alpha_s + ch.store_alpha_s)
         return t
 
 

@@ -77,6 +77,9 @@ def train(
     resume: bool = False,
     stop_after: int | None = None,
     comm_session=None,
+    burst_at: int | None = None,
+    burst_world: int = 0,
+    burst_provider: str | None = None,
     log=print,
 ):
     """Train ``cfg`` for ``steps`` steps.
@@ -91,6 +94,15 @@ def train(
     preempted rank coming back, so it re-bootstraps through the session
     (re-rendezvous + re-punch, priced into the session's event log) before
     training continues — the paper's §V recovery path made explicit.
+
+    ``burst_at``/``burst_world``/``burst_provider`` model a serverful core
+    group absorbing a traffic burst: at that global step the session admits
+    ``burst_world`` extra workers (optionally from another provider) through
+    the incremental ``CommSession.expand`` path — priced against what a cold
+    re-bootstrap of the grown world would cost.  The burst only changes the
+    priced fabric, never the single-host training math, so kill/resume
+    traces stay identical; a run resumed *past* the burst step re-applies
+    the expansion to its fresh session so the modeled world matches.
     """
     opt_cfg = opt.OptConfig(
         lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps,
@@ -160,6 +172,23 @@ def train(
             f"int8 allgather {explicit.time_s*1e3:.1f} ms ({explicit.algorithm}); "
             f"explicit path {'ON' if use_explicit_dp else 'off' + why_off}")
 
+    def apply_burst():
+        expand_s = comm_session.expand(burst_world, provider=burst_provider)
+        full_s = comm_session.full_rebootstrap_time_s()
+        who = f" from {burst_provider}" if burst_provider else ""
+        log(f"burst: +{burst_world} workers{who} admitted at step {burst_at} "
+            f"-> world {comm_session.world}; incremental expand {expand_s:.1f}s "
+            f"modeled vs {full_s:.1f}s cold re-bootstrap of the grown world "
+            f"({expand_s / max(full_s, 1e-9):.0%})")
+
+    do_burst = (
+        comm_session is not None and burst_at is not None and burst_world > 0
+    )
+    if do_burst and start > burst_at:
+        # resumed past the burst: the expanded world is part of history
+        apply_burst()
+        do_burst = False
+
     # start the iterator at the global step so a resumed run consumes the
     # same data slices an uninterrupted run would (loss-trace continuity)
     it = data_iter(cfg, batch, seq_len, start=start)
@@ -167,6 +196,9 @@ def train(
     t0 = time.time()
     end = steps if stop_after is None else min(steps, stop_after)
     for step in range(start, end):
+        if do_burst and step == burst_at:
+            apply_burst()
+            do_burst = False
         batch_data = next(it)
         if use_explicit_dp:
             params, opt_state, grad_err, metrics = step_fn(
@@ -204,20 +236,34 @@ def main():
     ap.add_argument("--comm-world", type=int, default=32,
                     help="modeled communication-session world for the "
                          "re-bootstrap pricing on --resume")
+    ap.add_argument("--comm-fabric", default="lambda",
+                    help="fabric or registered provider name for the modeled "
+                         "communication session (e.g. lambda, aws-ec2)")
+    ap.add_argument("--burst-at", type=int, default=None,
+                    help="global step at which the modeled session absorbs a "
+                         "traffic burst (requires --burst-world)")
+    ap.add_argument("--burst-world", type=int, default=0,
+                    help="workers admitted at --burst-at via the incremental "
+                         "expand path")
+    ap.add_argument("--burst-provider", default=None,
+                    help="provider the burst workers come from (cross-provider "
+                         "pairs relay; default: the core fabric's)")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     comm_session = None
-    if args.resume:
+    if args.resume or (args.burst_at is not None and args.burst_world > 0):
         from repro.core.session import CommSession
 
-        comm_session = CommSession.bootstrap(args.comm_world, "lambda")
+        comm_session = CommSession.bootstrap(args.comm_world, args.comm_fabric)
     _, losses = train(
         cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume, stop_after=args.stop_after,
         comm_session=comm_session,
+        burst_at=args.burst_at, burst_world=args.burst_world,
+        burst_provider=args.burst_provider,
     )
     if losses:
         print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")

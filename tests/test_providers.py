@@ -1,0 +1,395 @@
+"""Provider registry, cost-aware placement, and burst-elastic sessions.
+
+Covers the ISSUE 6 acceptance criteria: the registry's compat views keep the
+calibrated paper-figure constants bit-identical, ``select_placement`` is
+monotone in the deadline and honest about feasibility, ``CommSession.expand``
+prices an incremental join strictly below a cold re-bootstrap of the grown
+world (same- and cross-provider), cross-provider pairs relay while burst
+same-provider pairs keep their own direct substrate, and a kill/resume drill
+through a burst reproduces the non-resumed run's states exactly.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BSPRuntime,
+    Burst,
+    CollectiveKind,
+    CommSession,
+    algorithms,
+    netsim,
+)
+from repro.core import cost_model as cm
+from repro.core import session as sess
+from repro.dist.object_store import LocalStore, S3Store
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip + compat views
+# ---------------------------------------------------------------------------
+
+
+class TestProviderRegistry:
+    def test_seeded_providers_registered(self):
+        for name in ("aws-lambda", "aws-ec2", "gcp-cloudrun", "hpc-slurm"):
+            assert name in netsim.providers()
+            assert netsim.get_provider(name).name == name
+
+    def test_compat_views_alias_registry_objects(self):
+        """CHANNELS/PLATFORMS are views over the registry entries — the same
+        objects, so calibration can never fork from the provider profiles."""
+        lam = netsim.get_provider("aws-lambda")
+        ec2 = netsim.get_provider("aws-ec2")
+        assert netsim.CHANNELS["direct"] is lam.direct is netsim.LAMBDA_DIRECT
+        assert netsim.CHANNELS["ec2-direct"] is ec2.direct is netsim.EC2_DIRECT
+        assert netsim.CHANNELS["redis"] is lam.staged[0] is netsim.REDIS_STAGED
+        assert netsim.CHANNELS["s3"] is lam.staged[1] is netsim.S3_STAGED
+        assert netsim.PLATFORMS["lambda-10gb"] is lam.platform
+        assert netsim.PLATFORMS["ec2-15gb-4vcpu"] is ec2.platform
+        # exactly the original Table I platforms — no registry extras leak in
+        assert sorted(netsim.PLATFORMS) == sorted([
+            "ec2-15gb-4vcpu", "ec2-7.5gb-2vcpu", "lambda-10gb", "lambda-6gb",
+            "rivanna-10gb", "rivanna-6gb"])
+
+    def test_register_round_trip_and_shadow_protection(self):
+        prof = netsim.ProviderProfile(
+            name="test-edge", kind="serverless", platform=netsim.LAMBDA_6GB,
+            direct=netsim.LAMBDA_DIRECT, staged=(netsim.REDIS_STAGED,),
+            usd_per_gb_s=1e-5,
+        )
+        try:
+            assert netsim.register_provider(prof) is prof
+            assert netsim.get_provider("test-edge") is prof
+            assert "test-edge" in netsim.providers()
+            with pytest.raises(ValueError, match="already registered"):
+                netsim.register_provider(prof)
+            netsim.register_provider(prof, overwrite=True)  # explicit wins
+        finally:
+            netsim._PROVIDERS.pop("test-edge", None)
+        with pytest.raises(ValueError, match="unknown provider"):
+            netsim.get_provider("test-edge")
+        # profiles pass through get_provider unchanged
+        assert netsim.get_provider(prof) is prof
+
+    def test_relay_channel_defaults_and_missing(self):
+        assert netsim.get_provider("aws-lambda").relay_channel is netsim.REDIS_STAGED
+        bare = netsim.ProviderProfile(
+            name="bare", kind="hpc", platform=netsim.RIVANNA_10GB,
+            direct=netsim.HPC_DIRECT)
+        with pytest.raises(ValueError, match="no relay/staged"):
+            _ = bare.relay_channel
+
+    def test_calibrated_pins_unchanged(self):
+        """The paper-figure numbers must survive the registry refactor:
+        Fig 14's ~31.5 s Lambda init at 32 and the Fig 15/16 price basis."""
+        lam = netsim.get_provider("aws-lambda")
+        assert lam.bootstrap_time(32) == pytest.approx(31.5)
+        assert lam.bootstrap_time(32) == pytest.approx(
+            netsim.LAMBDA_10GB.init_time(32))
+        assert lam.usd_per_gb_s == pytest.approx(cm.LAMBDA_USD_PER_GB_S)
+        # bootstrapping by provider name prices identically to the classic
+        # "lambda" fabric (the blocked_rate is 0 on AWS, per the paper)
+        classic = CommSession.bootstrap(32, "lambda")
+        by_provider = CommSession.bootstrap(32, "aws-lambda")
+        assert by_provider.bootstrap_time_s == pytest.approx(
+            classic.bootstrap_time_s)
+        assert by_provider.link_map.all_direct
+
+    def test_provider_fabric_carries_nat_rate(self):
+        f = sess.provider_fabric("gcp-cloudrun")
+        assert f.provider == "gcp-cloudrun"
+        assert f.blocked_rate == pytest.approx(0.05)
+        s = CommSession.bootstrap(16, "gcp-cloudrun")
+        npairs = 16 * 15 // 2
+        assert len(s.link_map.relayed_pairs()) == round(0.05 * npairs)
+
+    def test_unknown_fabric_error_lists_providers(self):
+        with pytest.raises(ValueError, match="registered provider"):
+            CommSession.bootstrap(4, "azure-functions")
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware placement
+# ---------------------------------------------------------------------------
+
+PROVIDERS = ("aws-lambda", "aws-ec2", "gcp-cloudrun", "hpc-slurm")
+
+
+def _workload(world=32, compute_s=120.0):
+    return algorithms.Workload(
+        world=world, compute_s=compute_s,
+        collectives=(("allreduce", 1 << 22, 10), ("barrier", 0, 10)),
+    )
+
+
+class TestPlacement:
+    def test_candidates_price_all_providers(self):
+        bids = algorithms.placement_candidates(_workload(), PROVIDERS)
+        assert sorted(b.provider for b in bids) == sorted(PROVIDERS)
+        for b in bids:
+            assert b.time_s == pytest.approx(b.init_s + b.compute_s + b.comm_s)
+            assert b.cost_usd > 0 and b.feasible
+
+    def test_select_is_min_cost_feasible(self):
+        w = _workload()
+        bids = algorithms.placement_candidates(w, PROVIDERS)
+        loose = max(b.time_s for b in bids) * 2
+        pick = algorithms.select_placement(w, PROVIDERS, loose)
+        assert pick.feasible
+        assert pick.cost_usd == pytest.approx(min(b.cost_usd for b in bids))
+
+    def test_monotone_in_deadline_and_feasibility_flag(self):
+        """Loosening the deadline can only lower the winning cost; an
+        impossible deadline returns the fastest bid flagged infeasible."""
+        w = _workload()
+        bids = algorithms.placement_candidates(w, PROVIDERS)
+        fastest = min(b.time_s for b in bids)
+        prev_cost = None
+        for dl in sorted([fastest * 0.5] + [b.time_s * 1.001 for b in bids]):
+            p = algorithms.select_placement(w, PROVIDERS, dl)
+            assert p.feasible == (dl >= fastest)
+            if p.feasible:
+                if prev_cost is not None:
+                    assert p.cost_usd <= prev_cost + 1e-15
+                prev_cost = p.cost_usd
+        infeasible = algorithms.select_placement(w, PROVIDERS, fastest * 0.5)
+        assert not infeasible.feasible
+        assert infeasible.time_s == pytest.approx(fastest)
+
+    def test_slurm_queue_wait_gates_tight_deadlines(self):
+        """HPC is the cheap-but-slow-to-start bid: its 45 s batch-queue wait
+        must keep it out of deadlines EC2 meets."""
+        w = _workload(world=8, compute_s=2.0)
+        ec2 = algorithms.select_placement(w, ("aws-ec2",), 1e9)
+        assert ec2.time_s < 45.0
+        tight = algorithms.select_placement(w, PROVIDERS, ec2.time_s * 1.01)
+        assert tight.feasible and tight.provider != "hpc-slurm"
+        # once compute dominates, the billed queue wait amortizes and the
+        # cheap fast-CPU allocation wins any loose deadline
+        heavy = _workload(world=8, compute_s=600.0)
+        loose = algorithms.select_placement(heavy, PROVIDERS, 1e9)
+        assert loose.provider == "hpc-slurm"
+
+    def test_empty_providers_raises(self):
+        with pytest.raises(ValueError):
+            algorithms.select_placement(_workload(), (), 1e9)
+
+
+class TestProviderLinks:
+    def test_mixed_world_topology(self):
+        links = algorithms.provider_links(
+            ["aws-lambda", "aws-lambda", "aws-ec2", "aws-ec2"])
+        # cross-provider pairs relay through the base provider's store
+        relayed = {(i, j) for (i, j, _) in links.relayed}
+        assert relayed == {(0, 2), (0, 3), (1, 2), (1, 3)}
+        assert all(ch is netsim.REDIS_STAGED for (_, _, ch) in links.relayed)
+        # the EC2 pair keeps its own (faster) direct substrate as an override
+        assert links.pair_direct == ((2, 3, netsim.EC2_DIRECT),)
+        assert links.direct is netsim.LAMBDA_DIRECT
+        assert not links.all_direct
+
+    def test_homogeneous_world_is_all_direct(self):
+        links = algorithms.provider_links(["aws-ec2"] * 4)
+        assert links.all_direct and links.direct is netsim.EC2_DIRECT
+
+    def test_relay_must_be_staged(self):
+        with pytest.raises(ValueError, match="staged"):
+            algorithms.provider_links(
+                ["aws-lambda", "aws-ec2"], relay=netsim.EC2_DIRECT)
+
+
+# ---------------------------------------------------------------------------
+# Burst-elastic sessions
+# ---------------------------------------------------------------------------
+
+
+def _expand_events(s):
+    return [e for e in s.events
+            if e.kind == CollectiveKind.BOOTSTRAP and e.algo.startswith("expand")]
+
+
+class TestExpand:
+    def test_same_provider_expand_prices_two_punch_waves(self):
+        """A warm join needs one concurrent punch wave to the core and one
+        among the joiners — not a per-level ladder."""
+        s = CommSession.bootstrap(16, "lambda")
+        boot = s.bootstrap_time_s
+        t = s.expand(16)
+        per_level = netsim.LAMBDA_10GB.init_per_level_s
+        assert t == pytest.approx(2 * per_level)  # lambda init_base_s == 0
+        assert s.expand_time_s == pytest.approx(t)
+        assert s.bootstrap_time_s == pytest.approx(boot)  # log untouched
+        assert s.world == 32 and s.link_map.world == 32
+        assert [e.algo for e in _expand_events(s)] == [
+            "expand_rendezvous", "expand_punch_core", "expand_punch_new"]
+        # acceptance: incremental expand strictly under a cold 32-bootstrap
+        assert t < s.full_rebootstrap_time_s()
+        assert s.full_rebootstrap_time_s() == pytest.approx(
+            netsim.LAMBDA_10GB.init_time(32))
+
+    def test_single_rank_join_skips_new_wave(self):
+        s = CommSession.bootstrap(8, "lambda")
+        s.expand(1)
+        assert "expand_punch_new" not in [e.algo for e in _expand_events(s)]
+        assert s.world == 9
+
+    def test_cross_provider_expand_relays_core_links(self):
+        s = CommSession.bootstrap(16, "aws-ec2")
+        t = s.expand(16, provider="aws-lambda")
+        assert t < s.full_rebootstrap_time_s()
+        assert s.rank_providers == ["aws-ec2"] * 16 + ["aws-lambda"] * 16
+        # every core<->new pair is forced onto a relay...
+        for c in range(16):
+            for n in range(16, 32):
+                link = s.link_map.link(c, n)
+                assert link.relayed and link.channel.staged
+        # ...while lambda<->lambda burst pairs punch on their own substrate
+        ln = s.link_map.link(16, 17)
+        assert not ln.relayed and ln.channel is netsim.LAMBDA_DIRECT
+        assert s.link_map.link(0, 1).channel is netsim.EC2_DIRECT
+        algos = [e.algo for e in _expand_events(s)]
+        assert "expand_punch_core" not in algos  # nothing to punch cross-NAT
+        assert "expand_relay_fallback" in algos
+        (fb,) = [e for e in _expand_events(s) if e.algo == "expand_relay_fallback"]
+        assert fb.relayed_pairs >= 16 * 16
+
+    def test_staged_join_is_one_store_rendezvous(self):
+        s = CommSession.bootstrap(4, "s3")
+        t = s.expand(2)
+        (ev,) = _expand_events(s)
+        assert ev.algo == "expand_store_rendezvous"
+        assert t == pytest.approx(
+            sess.mediated_bootstrap_time(netsim.S3_STAGED, 2))
+        assert s.link_map.link(0, 5).relayed
+
+    def test_expand_requires_bootstrap_lifecycle(self):
+        from repro.core import Communicator
+
+        with pytest.raises(ValueError, match="bootstrap"):
+            Communicator(4).session.expand(2)
+
+    def test_expanded_world_collectives_and_heterogeneous_cost(self):
+        """The grown communicator completes collectives over the mixed link
+        table, and per-rank pricing bills burst ranks from their join step
+        at their own provider's rates."""
+        s = CommSession.bootstrap(8, "aws-ec2")
+        rt = BSPRuntime(8, session=s)
+
+        def step(rank, state, comm, world):
+            out = comm.allreduce([np.asarray(1.0)] * world)
+            return (state or 0.0) + float(out[rank])
+
+        states, report = rt.run(
+            [(f"s{i}", step) for i in range(4)], [0.0] * 8,
+            burst=Burst(at_step=2, new_ranks=8, provider="aws-lambda"),
+        )
+        assert report.world == 16 and rt.world == 16
+        # pre-burst steps reduced over 8 ranks, post-burst over 16
+        assert states[:8] == [8.0 + 8.0 + 16.0 + 16.0] * 8
+        assert states[8:] == [16.0 + 16.0] * 8
+        assert report.joined_at == {r: 2 for r in range(8, 16)}
+        assert report.supersteps[2].expand_s == pytest.approx(s.expand_time_s)
+        costs = cm.heterogeneous_run_cost(report, s)
+        assert set(costs["per_provider_usd"]) == {"aws-ec2", "aws-lambda"}
+        assert costs["total_usd"] == pytest.approx(sum(costs["per_rank_usd"]))
+        # a burst rank pays for 2 of 4 supersteps and no bootstrap: strictly
+        # cheaper than it would be as a core rank of the same provider
+        lam = netsim.get_provider("aws-lambda")
+        full_wall = report.init_s + sum(st.total_s for st in report.supersteps)
+        assert costs["per_rank_usd"][8] < lam.invocation_cost(10.0, full_wall)
+
+    def test_kill_resume_during_burst_identical_traces(self, tmp_path):
+        """Acceptance: a run killed after the pre-burst checkpoint and
+        resumed through the same burst reproduces the uninterrupted run's
+        states exactly — including a deadline-killed straggler re-joining
+        the *expanded* world."""
+        def step(rank, state, comm, world):
+            out = comm.allreduce([np.asarray(float(rank + 1))] * world)
+            return (state or 0.0) + float(out[rank])
+
+        steps = [(f"s{i}", step) for i in range(4)]
+        burst = Burst(at_step=2, new_ranks=4, provider="gcp-cloudrun")
+
+        def straggle(step_idx, rank):
+            return 10.0 if (step_idx, rank) == (2, 1) else 0.0
+
+        def _run(resume_from=None):
+            s = CommSession.bootstrap(4, "aws-lambda")
+            rt = BSPRuntime(4, session=s, checkpoint_dir=tmp_path / "a",
+                            deadline_s=5.0)
+            states, report = rt.run(
+                steps, [0.0] * 4, burst=burst, resume_from=resume_from,
+                straggle_injector=straggle,
+            )
+            return s, states, report
+
+        _, ref_states, ref_report = _run()
+        assert ref_report.supersteps[2].retries == 1  # the kill happened
+        # the re-invoked rank re-punched the grown world, not the old one
+        ckpt = BSPRuntime.checkpoint_at(tmp_path / "a", 1)
+        assert ckpt is not None and ckpt["world"] == 4
+        s2, res_states, res_report = _run(resume_from=ckpt)
+        assert res_states == ref_states
+        assert res_report.world == ref_report.world == 8
+        assert res_report.joined_at == ref_report.joined_at
+        assert s2.rebootstrap_time_s > 0
+        # resuming PAST the burst skips re-expansion: world already grown
+        late = BSPRuntime.checkpoint_at(tmp_path / "a", 2)
+        assert late["world"] == 8
+        s3 = CommSession.bootstrap(4, "aws-lambda")
+        s3.expand(4, provider="gcp-cloudrun")
+        rt3 = BSPRuntime(8, session=s3)
+        tail_states, tail_report = rt3.run(
+            steps, [0.0] * 8, burst=burst, resume_from=late)
+        assert tail_states == ref_states
+        assert tail_report.joined_at == {}  # no expand re-ran
+
+    def test_benchmark_artifact_gates(self):
+        """The CI artifact's two inline gates, exercised directly."""
+        from benchmarks import provider_placement as bench
+
+        scenario = bench._burst_scenario("aws-ec2", "aws-lambda")
+        assert scenario["expand_s"] < scenario["full_rebootstrap_s"]
+        sweep = bench._deadline_sweep(8)  # asserts feasibility/monotonicity
+        assert any(pt["feasible"] for pt in sweep["sweep"])
+
+
+# ---------------------------------------------------------------------------
+# Pooled ranged-GET pricing (the restore-cliff satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestPooledRangedGets:
+    def test_pool_amortizes_latency_across_batches(self):
+        s3 = S3Store()
+        payload = bytes(range(256)) * 64
+        s3.put_objects_atomic("g", {"obj": payload})
+        s3.reset_ops()
+        per_request = s3.channel.alpha_s + s3.channel.store_alpha_s
+        beta = s3.channel.beta_s_per_byte
+        pool = s3.request_pool
+        n = pool + pool // 2  # 1.5 pools -> exactly 2 round trips
+        ranges = [(i, i + 8) for i in range(n)]
+        half = n // 2
+        out = s3.get_ranges("g", "obj", ranges[:half])
+        out += s3.get_ranges("g", "obj", ranges[half:])  # cursor persists
+        assert out == [payload[a:b] for a, b in ranges]
+        nbytes = sum(b - a for a, b in ranges)
+        expected = math.ceil(n / pool) * per_request + nbytes * beta
+        assert s3.op_time_s == pytest.approx(expected)
+        assert s3.gets == n  # every GET individually billed
+        # reset_ops rewinds the cursor: the next batch pays a fresh trip
+        s3.reset_ops()
+        s3.get_ranges("g", "obj", [(0, 8)])
+        assert s3.op_time_s == pytest.approx(per_request + 8 * beta)
+
+    def test_serial_store_matches_get_object(self, tmp_path):
+        local = LocalStore(tmp_path)
+        payload = b"0123456789abcdef"
+        local.put_objects_atomic("g", {"obj": payload})
+        assert local.request_pool == 1
+        out = local.get_ranges("g", "obj", [(0, 4), (8, 12)])
+        assert out == [payload[0:4], payload[8:12]]
