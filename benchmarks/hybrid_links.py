@@ -57,7 +57,7 @@ def blocked_pairs_for(world: int, fraction: float, seed: int = 0) -> list[tuple[
 def sweep() -> list[dict]:
     rows = []
     for relay_name in RELAYS:
-        relay = netsim.CHANNELS[relay_name]
+        relay = netsim.resolve_channel(relay_name)
         for world in WORLDS:
             for fraction in FRACTIONS:
                 blocked = blocked_pairs_for(world, fraction)

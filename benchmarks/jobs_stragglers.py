@@ -1,0 +1,145 @@
+"""Jobs-layer straggler mitigation: speculation vs no-mitigation, priced.
+
+The SLR's recurring serverless-vs-HPC gap is tail latency under stragglers:
+a map job is as slow as its slowest invocation unless the runtime fights
+back.  This benchmark drives ``repro.jobs.JobExecutor`` through an
+injected-straggler scenario (a shared ``core.faults.FaultPlan`` — the same
+adversary type ``BSPRuntime.run`` takes): every 8th task of a
+world-sized map is delayed ``STRAGGLE_S`` simulated seconds, at world
+{8, 32, 64}, once with speculation disabled and once with backup
+invocations enabled.  Speculation detects the laggards at the latency
+threshold, re-invokes them fresh, and the earlier copy wins — trading a
+few duplicate invocation bills for the tail.
+
+Emits ``experiments/BENCH_jobs.json``.  CI gates (asserted in ``run``):
+(a) speculative map completion is strictly faster than no-mitigation at
+EVERY swept world size; (b) each job's priced cost equals the sum of its
+per-attempt provider bills recomputed independently through
+``cost_model.LambdaInvocation`` (GB-seconds + per-request), within 1e-6
+relative tolerance — the jobs layer and the paper's §IV cost model agree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.faults import FaultPlan
+from repro.jobs import JobExecutor, SpeculationPolicy, get_result
+
+WORLDS = (8, 32, 64)
+STRAGGLE_S = 25.0
+STRAGGLE_EVERY = 8
+MEM_GB = 10.0
+PROVIDER = "aws-lambda"
+
+
+def _task(x: int) -> float:
+    # real measured compute (tiny next to the injected 25 s tail)
+    return float(np.arange(1000, dtype=np.float64).sum() + x)
+
+
+def _plan(ntasks: int) -> FaultPlan:
+    return FaultPlan(
+        straggles=tuple(
+            (0, i, STRAGGLE_S) for i in range(0, ntasks, STRAGGLE_EVERY)
+        )
+    )
+
+
+def _recompute_cost(report) -> float:
+    """Independent re-pricing of every billed attempt via cost_model."""
+    return sum(
+        cost_model.LambdaInvocation(mem_gb=report.mem_gb, duration_s=a.billed_s).cost
+        for t in report.tasks for a in t.attempts
+    ) + report.reduce_cost_usd
+
+
+def _one_world(world: int) -> dict:
+    plan = _plan(world)
+    expected = [_task(x) for x in range(world)]
+
+    runs = {}
+    for label, policy in (
+        ("no_mitigation", SpeculationPolicy(enabled=False)),
+        ("speculation", SpeculationPolicy()),
+    ):
+        ex = JobExecutor(provider=PROVIDER, mem_gb=MEM_GB, speculation=policy)
+        fs = ex.map(_task, range(world), faults=plan)
+        assert get_result(fs) == expected, f"{label} w{world}: wrong results"
+        rep = fs[0].job
+        model_cost = _recompute_cost(rep)
+        assert abs(rep.cost_usd - model_cost) <= 1e-6 * max(model_cost, 1e-12), (
+            f"{label} w{world}: job cost {rep.cost_usd} != "
+            f"cost_model recomputation {model_cost}"
+        )
+        runs[label] = {
+            "tasks_s": rep.tasks_s,
+            "completion_s": rep.init_s + rep.tasks_s,
+            "init_s": rep.init_s,
+            "cost_usd": rep.cost_usd,
+            "cost_model_usd": model_cost,
+            "retries": rep.retries,
+            "speculative_launched": rep.speculative_launched,
+            "speculative_wins": rep.speculative_wins,
+            "speculative_discarded": rep.speculative_discarded,
+        }
+
+    spec, base = runs["speculation"], runs["no_mitigation"]
+    assert spec["tasks_s"] < base["tasks_s"], (
+        f"w{world}: speculation ({spec['tasks_s']:.2f}s) not faster than "
+        f"no-mitigation ({base['tasks_s']:.2f}s)"
+    )
+    # the backup copies are billed: mitigation trades $ for tail latency
+    assert spec["speculative_wins"] >= 1
+    assert spec["cost_usd"] > base["cost_usd"]
+    return {
+        "world": world,
+        "ntasks": world,
+        "stragglers": len(_plan(world).straggles),
+        **{k: v for k, v in runs.items()},
+        "speedup": base["tasks_s"] / spec["tasks_s"],
+    }
+
+
+def run() -> dict:
+    return {
+        "provider": PROVIDER,
+        "mem_gb": MEM_GB,
+        "straggle_extra_s": STRAGGLE_S,
+        "straggle_every": STRAGGLE_EVERY,
+        "sweep": [_one_world(w) for w in WORLDS],
+    }
+
+
+def write_report(out: str | Path) -> dict:
+    res = run()  # the run itself asserts the speedup + cost gates
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main(report=print) -> None:
+    res = run()
+    for row in res["sweep"]:
+        w = row["world"]
+        report(f"jobs_stragglers/w{w}_no_mitigation_s,,"
+               f"{row['no_mitigation']['tasks_s']:.3f}")
+        report(f"jobs_stragglers/w{w}_speculation_s,,"
+               f"{row['speculation']['tasks_s']:.3f}")
+        report(f"jobs_stragglers/w{w}_speedup,,{row['speedup']:.2f}")
+        report(f"jobs_stragglers/w{w}_spec_cost_usd,,"
+               f"{row['speculation']['cost_usd']:.6f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/BENCH_jobs.json")
+    args = ap.parse_args()
+    res = write_report(args.out)
+    print(json.dumps(res, indent=1))

@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   collective_algos   tuned algorithm selection vs fixed schedules (engine sweep)
   hybrid_links       link-aware pricing vs hole-punch-failed pair fraction
   provider_placement deadline-vs-$ placement Pareto + burst expand vs re-bootstrap
+  jobs_stragglers    jobs-layer speculation vs no-mitigation under stragglers
 """
 
 from __future__ import annotations
@@ -31,6 +32,7 @@ def main() -> None:
         cost_analysis,
         groupby_scaling,
         hybrid_links,
+        jobs_stragglers,
         local_ops,
         provider_placement,
         roofline,
@@ -51,6 +53,7 @@ def main() -> None:
         ("collective_algos", collective_algos),
         ("hybrid_links", hybrid_links),
         ("provider_placement", provider_placement),
+        ("jobs_stragglers", jobs_stragglers),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -1,0 +1,35 @@
+"""A priced Monte Carlo sweep in ~10 lines — the FunctionExecutor promise.
+
+16 serverless invocations estimate pi by rejection sampling, reduced
+through a priced gather, on an unlucky cloud: one worker crashes (retried
+with backoff) and one straggles 20 s (beaten by a speculative backup).
+Every invocation — including the retry and the losing duplicate — lands on
+the job's bill.
+
+    PYTHONPATH=src python examples/monte_carlo_jobs.py
+"""
+
+import numpy as np
+
+from repro.core import FaultPlan
+from repro.jobs import JobExecutor
+
+SAMPLES, TASKS = 200_000, 16
+
+
+def trial(seed: int) -> int:
+    xy = np.random.default_rng(seed).random((SAMPLES, 2))
+    return int((np.square(xy).sum(axis=1) <= 1.0).sum())
+
+
+faults = FaultPlan(kills=((0, 3),), straggles=((0, 5, 20.0),))
+ex = JobExecutor(provider="aws-lambda")  # retries + speculation on by default
+pi = ex.map_reduce(
+    trial, range(TASKS),
+    lambda hits: 4.0 * sum(hits) / (TASKS * SAMPLES),
+    faults=faults,
+)
+rep = pi.job
+print(f"pi ~= {pi.result():.5f} from {rep.ntasks} tasks on {rep.provider}")
+print(f"retries={rep.retries} speculative_wins={rep.speculative_wins} "
+      f"wall={rep.total_s:.1f}s cost=${rep.cost_usd:.5f}")

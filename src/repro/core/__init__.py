@@ -7,7 +7,10 @@ from repro.core.netsim import (  # noqa: F401
     get_provider,
     providers,
     register_provider,
+    resolve_channel,
+    resolve_provider,
 )
+from repro.core.faults import FaultPlan  # noqa: F401
 from repro.core.algorithms import (  # noqa: F401
     Choice,
     DecisionCache,

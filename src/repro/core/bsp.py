@@ -33,6 +33,7 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Sequence
 
+from repro.core import faults as _faults
 from repro.core import netsim
 from repro.core import session as _session
 from repro.core.communicator import Communicator
@@ -102,19 +103,44 @@ class BSPRuntime:
     def __init__(
         self,
         world_size: int,
-        platform: netsim.PlatformModel = netsim.LAMBDA_10GB,
+        platform: netsim.PlatformModel | None = None,
         channel_env: str | None = None,
         checkpoint_dir: str | Path | Any | None = None,
         deadline_s: float | None = None,
         cpu_scale: float = 1.0,
         algorithm: str = "auto",
         session: _session.CommSession | None = None,
+        provider: str | netsim.ProviderProfile | None = None,
     ):
         self.world = int(world_size)
+        # "Where this runs" comes from exactly one of: a pre-bootstrapped
+        # session, a provider (name or profile), or the deprecated
+        # channel_env string.  A session already fixes the fabric, so
+        # combining it with the others is a contradiction, not a tiebreak.
+        if session is not None and (provider is not None or channel_env is not None):
+            raise ValueError(
+                "session= already fixes the fabric; don't also pass "
+                "provider=/channel_env="
+            )
+        self.provider: netsim.ProviderProfile | None = None
+        if provider is not None:
+            # raises if platform= conflicts with the named provider
+            profile = netsim.resolve_provider(provider, platform=platform)
+            self.provider = profile
+            platform = profile.platform
+            channel = profile.direct
+            fabric = _session.provider_fabric(profile)
+        else:
+            if channel_env is not None:
+                # deprecation warning + compat map live in resolve_provider
+                channel = netsim.resolve_provider(channel_env=channel_env).direct
+            else:
+                channel = None
+            platform = platform if platform is not None else netsim.LAMBDA_10GB
+            if channel is None:
+                channel = platform.channel
+            fabric = _session.Fabric(platform=platform, direct=channel)
         self.platform = platform
-        channel = (
-            netsim.CHANNELS[channel_env] if channel_env else platform.channel
-        )
         # The runtime owns a CommSession: bootstrap (rendezvous + hole punch,
         # or store rendezvous for mediated channels) is priced as BOOTSTRAP
         # events in the session log instead of the old side-channel
@@ -122,15 +148,13 @@ class BSPRuntime:
         # `session` to run over a pre-bootstrapped (possibly hybrid-link)
         # topology — collectives then price link-aware automatically.
         if session is None:
-            session = _session.CommSession.bootstrap(
-                self.world, _session.Fabric(platform=platform, direct=channel)
-            )
+            session = _session.CommSession.bootstrap(self.world, fabric)
         else:
             if session.world != self.world:
                 raise ValueError(
                     f"session world {session.world} != runtime world {self.world}"
                 )
-            channel = session.direct_channel  # the bootstrapped fabric wins
+            channel = session.direct_channel
         self.session = session
         # algorithm: collective schedule policy for every priced exchange —
         # "auto" (tuned engine) or "fixed" (calibrated paper schedule)
@@ -234,17 +258,33 @@ class BSPRuntime:
         resume_from: dict | None = None,
         max_retries: int = 2,
         burst: Burst | None = None,
+        faults: _faults.FaultPlan | None = None,
     ) -> tuple[list[Any], RunReport]:
         """Execute `supersteps` over per-rank `init_states`.
 
+        ``faults`` is a :class:`repro.core.faults.FaultPlan` — the declarative
+        kill/straggle/deadline schedule shared with ``JobExecutor.map``.  The
+        legacy kwargs remain as thin adapters over the same machinery:
         fail_injector(step, rank) -> True means that rank dies on its first
-        attempt of that step (it is retried, serverless-style re-invocation).
+        attempt of that step (it is retried, serverless-style re-invocation);
         straggle_injector(step, rank) -> extra seconds of simulated delay; a
-        rank whose simulated time exceeds `deadline_s` is killed and retried.
+        rank whose simulated time exceeds `deadline_s` (the plan's, falling
+        back to the runtime's) is killed and retried.
         ``burst`` admits extra workers before superstep ``burst.at_step``
         runs; a run resumed *past* that step must already be at the expanded
         world (the checkpoint recorded it), so the burst is skipped.
         """
+        if faults is not None and (
+            fail_injector is not None or straggle_injector is not None
+        ):
+            raise ValueError("pass faults= or the legacy injectors, not both")
+        plan = (
+            faults
+            if faults is not None
+            else _faults.FaultPlan.from_injectors(fail_injector, straggle_injector)
+        )
+        armed = plan.armed()
+        deadline_s = plan.deadline_s if plan.deadline_s is not None else self.deadline_s
         if len(init_states) != self.world:
             raise ValueError("need one init state per rank")
 
@@ -284,12 +324,10 @@ class BSPRuntime:
                 while True:
                     t0 = time.perf_counter()
                     simulated_extra = (
-                        straggle_injector(idx, rank)
-                        if straggle_injector and not deadline_killed
-                        else 0.0
+                        armed.extra_delay(idx, rank) if not deadline_killed else 0.0
                     )
                     try:
-                        if fail_injector and fail_injector(idx, rank):
+                        if armed.fail(idx, rank):
                             raise WorkerFailure(f"rank {rank} died in superstep {idx}")
                         out = fn(rank, states[rank], self.comm, self.world)
                     except WorkerFailure:
@@ -301,8 +339,8 @@ class BSPRuntime:
                     elapsed = (time.perf_counter() - t0) / self.platform.cpu_speed
                     elapsed = elapsed * self.cpu_scale + simulated_extra
                     if (
-                        self.deadline_s is not None
-                        and elapsed > self.deadline_s
+                        deadline_s is not None
+                        and elapsed > deadline_s
                         and attempt <= max_retries
                     ):
                         # straggler mitigation: kill + re-invoke.  The fresh

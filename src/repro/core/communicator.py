@@ -686,11 +686,17 @@ class Communicator:
             raise ValueError(f"rank {r} out of range for world {self.world_size}")
 
 
-def make_communicator(world_size: int, env: str = "direct") -> Communicator:
+def make_communicator(
+    world_size: int,
+    env: str = "direct",
+    provider: "str | netsim.ProviderProfile | None" = None,
+) -> Communicator:
     """Factory mirroring the paper's ``env`` switch (Listing 1: 'fmi' /
-    'fmi-cylon' / storage channels)."""
-    try:
-        channel = netsim.CHANNELS[env]
-    except KeyError:
-        raise ValueError(f"unknown communicator env {env!r}; options: {sorted(netsim.CHANNELS)}")
+    'fmi-cylon' / storage channels).  ``provider`` names a
+    :class:`~repro.core.netsim.ProviderProfile` instead — the communicator
+    then rides that provider's direct channel."""
+    if provider is not None:
+        channel = netsim.resolve_provider(provider).direct
+    else:
+        channel = netsim.resolve_channel(env)
     return Communicator(world_size, channel)

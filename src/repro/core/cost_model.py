@@ -124,10 +124,10 @@ def join_cost(
             ).bootstrap_time_s
         else:
             init_s = _session.mediated_bootstrap_time(
-                netsim.CHANNELS[channel], workers
+                netsim.resolve_channel(channel), workers
             )
     if compute_s is None:
-        ch = netsim.CHANNELS[channel]
+        ch = netsim.resolve_channel(channel)
         # strong-scaling join basis (paper Fig 15/16 cost basis): 4.5M rows,
         # `shuffle_rounds` iterations of (hash partition + alltoallv + local
         # join); local phase ~0.1 s/iteration at 32 workers (Table III).

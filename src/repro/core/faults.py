@@ -1,0 +1,165 @@
+"""Unified fault injection: one plan type for every execution surface.
+
+The paper's §V gap analysis (no fault tolerance on Lambda) gave this repo
+two ad-hoc injection hooks on :meth:`repro.core.bsp.BSPRuntime.run` —
+``fail_injector(step, rank)`` and ``straggle_injector(step, rank)`` — and
+the jobs layer needs the same adversary for its retry/speculation machinery.
+A :class:`FaultPlan` folds both (plus a deadline) into one declarative,
+*seedable* object accepted by ``BSPRuntime.run(faults=...)`` and
+``JobExecutor.map(faults=...)``:
+
+- ``kills``: scheduled worker deaths — ``(step, rank)`` or
+  ``(step, rank, count)`` entries; the rank dies ``count`` times (default 1)
+  at that step before succeeding (serverless re-invocation semantics).
+- ``straggles``: scheduled delays — ``(step, rank, extra_s)`` entries add
+  ``extra_s`` simulated seconds to that rank's step.
+- ``kill_rate`` / ``straggle_rate`` + ``straggle_s``: random faults, drawn
+  *per (step, rank) coordinate* from ``seed`` — deterministic and
+  order-independent, so two runs of the same plan (or the same plan armed
+  twice, e.g. a speculation-on vs speculation-off A/B) see identical
+  adversaries.
+- ``deadline_s``: per-attempt execution bound; a rank/task whose simulated
+  time exceeds it is killed and re-invoked by the runtime.
+
+Coordinate convention: the first axis is the *execution epoch* — the
+superstep index under the BSP runtime, the attempt index (0 = first
+invocation) under the jobs layer; the second axis is the worker identity —
+the BSP rank, or the task index for a job.  So ``kills=((0, 3),)`` means
+"rank/task 3 dies on its first try" on either surface.
+
+``FaultPlan.from_injectors`` wraps the legacy callables so the old
+``BSPRuntime.run(fail_injector=..., straggle_injector=...)`` kwargs remain
+thin adapters over the same machinery.
+
+Plans are immutable; :meth:`FaultPlan.armed` returns the stateful per-run
+view (scheduled kill counts are consumed as they fire).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+Injector = Callable[[int, int], bool]
+Straggler = Callable[[int, int], float]
+
+_KILL_TAG = 0x4B494C4C      # "KILL": namespaces the kill draws under seed
+_STRAGGLE_TAG = 0x534C4F57  # "SLOW": namespaces the straggle draws
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative kill/straggle/deadline schedule (see module docstring)."""
+
+    kills: tuple = ()                   # (step, rank[, count]) entries
+    straggles: tuple = ()               # (step, rank, extra_s) entries
+    kill_rate: float = 0.0              # P(first attempt dies) per coordinate
+    straggle_rate: float = 0.0          # P(straggle) per coordinate
+    straggle_s: float = 0.0             # delay added when a straggle fires
+    deadline_s: float | None = None     # per-attempt execution bound
+    seed: int = 0
+    # legacy adapters (FaultPlan.from_injectors); consulted before schedules
+    fail_injector: Injector | None = None
+    straggle_injector: Straggler | None = None
+
+    def __post_init__(self):
+        for k in self.kills:
+            if len(k) not in (2, 3):
+                raise ValueError(f"kill entry {k!r}: need (step, rank[, count])")
+        for s in self.straggles:
+            if len(s) != 3:
+                raise ValueError(f"straggle entry {s!r}: need (step, rank, extra_s)")
+        for name in ("kill_rate", "straggle_rate"):
+            v = getattr(self, name)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+
+    @classmethod
+    def from_injectors(
+        cls,
+        fail_injector: Injector | None = None,
+        straggle_injector: Straggler | None = None,
+        deadline_s: float | None = None,
+    ) -> "FaultPlan":
+        """Adapter for the legacy ``BSPRuntime.run`` injector callables."""
+        return cls(
+            fail_injector=fail_injector,
+            straggle_injector=straggle_injector,
+            deadline_s=deadline_s,
+        )
+
+    @classmethod
+    def none(cls) -> "FaultPlan":
+        return cls()
+
+    @property
+    def any_faults(self) -> bool:
+        return bool(
+            self.kills or self.straggles or self.kill_rate or self.straggle_rate
+            or self.fail_injector or self.straggle_injector
+        )
+
+    def _draw(self, tag: int, step: int, rank: int) -> float:
+        # per-coordinate seeded draw: deterministic AND independent of the
+        # order the runtime visits (step, rank) coordinates in — a retried
+        # or speculated schedule sees the same adversary as a straight run
+        rng = np.random.default_rng([self.seed, tag, int(step), int(rank)])
+        return float(rng.random())
+
+    def armed(self) -> "ArmedFaults":
+        """Stateful per-run view (scheduled kills are consumed as they fire)."""
+        return ArmedFaults(self)
+
+
+class ArmedFaults:
+    """One run's live fault state over an immutable :class:`FaultPlan`."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._kills: dict[tuple[int, int], int] = {}
+        for entry in plan.kills:
+            step, rank = int(entry[0]), int(entry[1])
+            count = int(entry[2]) if len(entry) == 3 else 1
+            self._kills[(step, rank)] = self._kills.get((step, rank), 0) + count
+        self._rate_fired: set[tuple[int, int]] = set()
+        self.kills_fired = 0
+        self.straggles_fired = 0
+
+    def fail(self, step: int, rank: int) -> bool:
+        """Does this (step/attempt, rank/task) attempt die?  Scheduled kills
+        burn down their count; rate-based kills fire at most once per
+        coordinate (the re-invocation then succeeds, serverless-style)."""
+        plan = self.plan
+        if plan.fail_injector is not None and plan.fail_injector(step, rank):
+            self.kills_fired += 1
+            return True
+        key = (int(step), int(rank))
+        remaining = self._kills.get(key, 0)
+        if remaining > 0:
+            self._kills[key] = remaining - 1
+            self.kills_fired += 1
+            return True
+        if plan.kill_rate > 0.0 and key not in self._rate_fired:
+            if plan._draw(_KILL_TAG, step, rank) < plan.kill_rate:
+                self._rate_fired.add(key)
+                self.kills_fired += 1
+                return True
+        return False
+
+    def extra_delay(self, step: int, rank: int) -> float:
+        """Injected straggler seconds for this coordinate (0.0 when none)."""
+        plan = self.plan
+        extra = 0.0
+        if plan.straggle_injector is not None:
+            extra += float(plan.straggle_injector(step, rank))
+        for s_step, s_rank, s_extra in plan.straggles:
+            if int(s_step) == int(step) and int(s_rank) == int(rank):
+                extra += float(s_extra)
+        if plan.straggle_rate > 0.0 and plan.straggle_s > 0.0:
+            if plan._draw(_STRAGGLE_TAG, step, rank) < plan.straggle_rate:
+                extra += plan.straggle_s
+        if extra:
+            self.straggles_fired += 1
+        return extra

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 
 # ---------------------------------------------------------------------------
 # Channel (communication substrate) models — paper §IV-B, Fig 10/12/13
@@ -318,6 +319,109 @@ PLATFORMS = {
     for p in (AWS_EC2.platform, EC2_L, AWS_LAMBDA.platform, LAMBDA_6GB,
               RIVANNA_10GB, RIVANNA_6GB)
 }
+
+
+# ---------------------------------------------------------------------------
+# "Where this runs" resolution — the ONE entry point
+# ---------------------------------------------------------------------------
+#
+# Everything above CHANNELS is calibration data; everything below is how the
+# rest of the repo is allowed to name it.  ``resolve_provider`` turns any of
+# the historical ways of saying "where this runs" — a provider name, a
+# ProviderProfile, a platform + channel pair, or the deprecated
+# ``channel_env`` string — into one canonical ProviderProfile.  Raw
+# ``CHANNELS[...]`` string lookups outside this shim are a lint-the-review
+# offense: they bypass the registry and fork "where" from "how much".
+
+
+def resolve_channel(channel: "str | ChannelModel") -> ChannelModel:
+    """Channel-name compat shim: the only sanctioned string->channel map."""
+    if isinstance(channel, ChannelModel):
+        return channel
+    try:
+        return CHANNELS[channel]
+    except KeyError:
+        raise ValueError(
+            f"unknown channel {channel!r}; options: {sorted(CHANNELS)}"
+        ) from None
+
+
+# derived profiles (e.g. aws-lambda forced onto its redis staging channel)
+# are interned here so repeated resolution returns the identical object
+_DERIVED: dict[tuple, ProviderProfile] = {}
+
+
+def resolve_provider(
+    provider: "str | ProviderProfile | None" = None,
+    *,
+    platform: PlatformModel | None = None,
+    channel: "str | ChannelModel | None" = None,
+    channel_env: str | None = None,
+) -> ProviderProfile:
+    """Resolve "where this runs" to a canonical :class:`ProviderProfile`.
+
+    Exactly one way in:
+
+    - ``provider``: a registered name (``"aws-lambda"``) or a profile —
+      returned as-is from the registry; may not be combined with
+      ``platform``/``channel`` (a profile already names both).
+    - ``platform`` and/or ``channel``: a derived profile — the registered
+      provider owning that platform/channel (falling back to ``aws-lambda``)
+      with the overrides applied.  ``resolve_provider(channel="redis")``
+      yields Lambda workers whose *direct* substrate is the redis staging
+      channel, exactly what the old ``channel_env="redis"`` meant.
+    - ``channel_env``: the deprecated spelling of ``channel`` — emits a
+      ``DeprecationWarning`` and resolves the same way.
+    - nothing: the calibrated default, ``aws-lambda``.
+
+    Derived profiles are interned, so resolution is referentially stable.
+    """
+    if channel_env is not None:
+        warnings.warn(
+            "channel_env= is deprecated; say where this runs with "
+            "provider=... (e.g. provider='aws-lambda') or channel=...",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if channel is not None:
+            raise ValueError("pass channel= or the deprecated channel_env=, not both")
+        channel = channel_env
+    if provider is not None:
+        if platform is not None or channel is not None:
+            raise ValueError(
+                "provider= already names the platform and channel; "
+                "don't combine it with platform=/channel="
+            )
+        return get_provider(provider)
+    if platform is None and channel is None:
+        return AWS_LAMBDA
+
+    ch = resolve_channel(channel) if channel is not None else None
+    base = None
+    if platform is not None:
+        base = next(
+            (p for p in _PROVIDERS.values() if p.platform is platform), None
+        )
+    if base is None and ch is not None:
+        base = next((p for p in _PROVIDERS.values() if p.direct is ch), None)
+    base = base or AWS_LAMBDA
+
+    overrides: dict = {}
+    suffix = []
+    if platform is not None and platform is not base.platform:
+        overrides["platform"] = platform
+        suffix.append(platform.name)
+    if ch is not None and ch is not base.direct:
+        overrides["direct"] = ch
+        suffix.append(ch.name)
+    if not overrides:
+        return base
+    key = (base.name, *suffix)
+    if key not in _DERIVED:
+        _DERIVED[key] = dataclasses.replace(
+            base, name=f"{base.name}@{'+'.join(suffix)}", **overrides
+        )
+    return _DERIVED[key]
 
 
 # ---------------------------------------------------------------------------

@@ -652,7 +652,7 @@ def hybrid_session(
 ) -> CommSession:
     """One-call hybrid topology: bootstrap a session in which
     ``blocked_pairs`` failed hole punching and relay through ``relay``."""
-    relay_ch = netsim.CHANNELS[relay] if isinstance(relay, str) else relay
+    relay_ch = netsim.resolve_channel(relay)
     if not relay_ch.staged:
         raise ValueError(f"relay channel must be staged, got {relay_ch.name!r}")
     fabric = Fabric(

@@ -162,6 +162,12 @@ class Store:
     def object_size(self, group: str, name: str) -> int:
         raise NotImplementedError
 
+    def list_objects(self, group: str) -> list[str]:
+        """Sorted object names in a committed group (data discovery: the
+        jobs-layer partitioner enumerates a dataset with this + ranged
+        GETs).  Raises ``KeyError`` for uncommitted groups."""
+        raise NotImplementedError
+
     def committed(self, group: str) -> bool:
         raise NotImplementedError
 
@@ -253,6 +259,14 @@ class LocalStore(Store):
             raise KeyError(f"no object {group}/{name} in {self.root}")
         self._record("head", f"{group}/{name}", 0)
         return path.stat().st_size
+
+    def list_objects(self, group: str) -> list[str]:
+        self._housekeep()
+        self._record("list", group, 0)
+        gdir = self.root / group
+        if not gdir.is_dir():
+            raise KeyError(f"no committed group {group!r} in {self.root}")
+        return sorted(p.name for p in gdir.iterdir() if p.is_file())
 
     def committed(self, group: str) -> bool:
         self._housekeep()
@@ -394,6 +408,13 @@ class S3Store(Store):
         data = self._resolve(group, name)
         self._record("head", f"{group}/{name}", 0)
         return len(data)
+
+    def list_objects(self, group: str) -> list[str]:
+        rec = self._commit_record(group)
+        if rec is None:
+            raise KeyError(f"group {group!r} has no commit record")
+        self._record("list", group, 0)
+        return sorted(rec["objects"])
 
     def committed(self, group: str) -> bool:
         self._record("head", f"{group}/{self._COMMIT}", 0)

@@ -1,0 +1,516 @@
+"""repro.jobs: futures semantics, retries, speculation, partitioner, pricing.
+
+Covers the ISSUE-7 futures contract: wait(ANY) returns on first completion,
+retry exhaustion surfaces the task exception, the speculative copy's
+duplicate result is discarded deterministically, the partitioner tiles
+every byte exactly once (property test), and the priced job cost equals
+the sum of per-task provider bills (cross-checked against ``cost_model``).
+Plus the unified run-construction API: ``resolve_provider``, the
+``channel_env`` deprecation, the session-conflict raise, and the shared
+``FaultPlan`` on both execution surfaces.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import FaultPlan, cost_model, netsim, resolve_channel, resolve_provider
+from repro.core import session as session_mod
+from repro.core.bsp import BSPRuntime
+from repro.dataframe import io as dfio
+from repro.dist.object_store import LocalStore, S3Store
+from repro.jobs import (
+    ALL_COMPLETED,
+    ANY_COMPLETED,
+    JobExecutor,
+    RetryPolicy,
+    SpeculationPolicy,
+    TaskError,
+    get_result,
+    partition_dataset,
+    wait,
+)
+
+
+def fresh_executor(**kw):
+    kw.setdefault("provider", "aws-lambda")
+    return JobExecutor(**kw)
+
+
+# -- futures semantics --------------------------------------------------------
+
+
+class TestFutures:
+    def test_map_results_in_order(self):
+        fs = fresh_executor().map(lambda x: x * x, range(8))
+        assert get_result(fs) == [x * x for x in range(8)]
+
+    def test_wait_any_returns_on_first_completion(self):
+        # one injected straggler: every other task finishes first
+        plan = FaultPlan(straggles=((0, 2, 30.0),))
+        ex = fresh_executor(speculation=SpeculationPolicy(enabled=False))
+        fs = ex.map(lambda x: x, range(6), faults=plan)
+        done, not_done = wait(fs, return_when=ANY_COMPLETED)
+        assert len(done) >= 1
+        assert len(done) + len(not_done) == 6
+        # the straggling task cannot be in the first-completion cut
+        assert all(f.task_id != 2 for f in done)
+        cut = max(f.done_s for f in done)
+        assert all(f.done_s > cut for f in not_done)
+
+    def test_wait_all_returns_everything(self):
+        fs = fresh_executor().map(lambda x: x, range(5))
+        done, not_done = wait(fs, return_when=ALL_COMPLETED)
+        assert len(done) == 5 and not_done == []
+
+    def test_wait_all_timeout_cuts_stragglers(self):
+        plan = FaultPlan(straggles=((0, 0, 30.0),))
+        ex = fresh_executor(speculation=SpeculationPolicy(enabled=False))
+        fs = ex.map(lambda x: x, range(4), faults=plan)
+        done, not_done = wait(fs, return_when=ALL_COMPLETED, timeout=10.0)
+        assert [f.task_id for f in not_done] == [0]
+        assert len(done) == 3
+
+    def test_call_async_single_future(self):
+        f = fresh_executor().call_async(lambda x: x * 3, 14)
+        assert f.result() == 42
+        assert f.done() and f.ready and not f.error
+
+    def test_failed_future_counts_as_completed(self):
+        def boom(x):
+            raise ValueError("nope")
+
+        ex = fresh_executor(retry=RetryPolicy(max_retries=0))
+        fs = ex.map(boom, [1]) + fresh_executor().map(lambda x: x, [2])
+        done, not_done = wait(fs, return_when=ALL_COMPLETED)
+        assert len(done) == 2 and not not_done
+
+
+# -- retries ------------------------------------------------------------------
+
+
+class TestRetries:
+    def test_retry_exhaustion_surfaces_task_exception(self):
+        def boom(x):
+            raise ValueError(f"bad input {x}")
+
+        ex = fresh_executor(retry=RetryPolicy(max_retries=2))
+        f = ex.map(boom, [7])[0]
+        assert f.error
+        with pytest.raises(ValueError, match="bad input 7"):
+            f.result()
+        # first attempt + 2 re-invocations, all billed
+        assert len(f.record.attempts) == 3
+        assert all(a.status == "error" for a in f.record.attempts)
+        assert f.record.cost_usd > 0
+
+    def test_get_result_raises_first_failure(self):
+        def maybe(x):
+            if x == 1:
+                raise RuntimeError("task 1 down")
+            return x
+
+        ex = fresh_executor(retry=RetryPolicy(max_retries=0))
+        with pytest.raises(RuntimeError, match="task 1 down"):
+            get_result(ex.map(maybe, range(3)))
+
+    def test_killed_attempt_retried_to_success(self):
+        fs = fresh_executor().map(
+            lambda x: x + 1, range(4), faults=FaultPlan(kills=((0, 2),))
+        )
+        assert get_result(fs) == [1, 2, 3, 4]
+        assert fs[2].record.retries == 1
+        assert fs[2].record.attempts[0].status == "killed"
+        assert fs[2].record.attempts[1].status == "ok"
+
+    def test_kill_every_attempt_exhausts_to_task_error(self):
+        ex = fresh_executor(retry=RetryPolicy(max_retries=2))
+        plan = FaultPlan(kills=((0, 0), (1, 0), (2, 0)))
+        f = ex.map(lambda x: x, [0], faults=plan)[0]
+        assert isinstance(f.exception(), TaskError)
+        assert len(f.record.attempts) == 3
+
+    def test_exponential_backoff_spaces_attempts(self):
+        ex = fresh_executor(
+            retry=RetryPolicy(max_retries=2, backoff_s=1.0, multiplier=3.0)
+        )
+        plan = FaultPlan(kills=((0, 0), (1, 0)))
+        f = ex.map(lambda x: x, [0], faults=plan)[0]
+        a = f.record.attempts
+        gap1 = a[1].start_s - a[0].end_s
+        gap2 = a[2].start_s - a[1].end_s
+        assert gap1 == pytest.approx(1.0)
+        assert gap2 == pytest.approx(3.0)
+
+    def test_deadline_kill_billed_at_deadline(self):
+        plan = FaultPlan(straggles=((0, 0, 9.0),), deadline_s=2.0)
+        ex = fresh_executor(speculation=SpeculationPolicy(enabled=False))
+        f = ex.map(lambda x: x, [5], faults=plan)[0]
+        a0 = f.record.attempts[0]
+        assert a0.status == "deadline"
+        assert a0.billed_s == pytest.approx(2.0)
+        # the re-invocation is a fresh worker: attempt-0 straggle gone
+        assert f.result() == 5
+        assert f.record.attempts[-1].status == "ok"
+
+
+# -- speculation --------------------------------------------------------------
+
+
+class TestSpeculation:
+    PLAN = FaultPlan(straggles=((0, 3, 25.0),))
+
+    def test_speculative_duplicate_discarded_deterministically(self):
+        reports = []
+        for _ in range(3):  # same plan, same adversary, same outcome
+            ex = fresh_executor(
+                speculation=SpeculationPolicy(min_lead_s=1.0))
+            fs = ex.map(lambda x: x + 1, range(8), faults=self.PLAN)
+            assert get_result(fs) == [x + 1 for x in range(8)]
+            reports.append(fs[0].job)
+        for rep in reports:
+            assert rep.speculative_launched == 1
+            assert rep.speculative_wins == 1
+            assert rep.speculative_discarded == 1
+            rec = rep.tasks[3]
+            assert rec.winner == "speculative"
+            # exactly one extra (speculative) attempt, and the winning copy
+            # finished strictly before the straggling primary
+            assert [a.speculative for a in rec.attempts] == [False, True]
+            assert rec.done_s < rec.attempts[0].end_s
+
+    def test_speculation_beats_no_mitigation(self):
+        spec = fresh_executor(speculation=SpeculationPolicy(min_lead_s=1.0))
+        nospec = fresh_executor(speculation=SpeculationPolicy(enabled=False))
+        w_spec = spec.map(lambda x: x, range(8), faults=self.PLAN)[0].job
+        w_base = nospec.map(lambda x: x, range(8), faults=self.PLAN)[0].job
+        assert w_spec.tasks_s < w_base.tasks_s
+        assert w_base.tasks_s >= 25.0
+        # ...and costs more: the losing duplicate is billed, not refunded
+        assert w_spec.cost_usd > w_base.cost_usd
+
+    def test_tie_goes_to_primary(self):
+        # no stragglers: nothing crosses the threshold, no backups at all
+        ex = fresh_executor()
+        fs = ex.map(lambda x: x, range(8))
+        rep = fs[0].job
+        assert rep.speculative_launched == 0
+        assert all(t.winner == "primary" for t in rep.tasks)
+
+
+# -- pricing ------------------------------------------------------------------
+
+
+class TestPricing:
+    def test_job_cost_is_sum_of_per_task_bills(self):
+        plan = FaultPlan(straggles=((0, 1, 25.0),), kills=((0, 4),))
+        ex = fresh_executor(mem_gb=10.0)
+        fs = ex.map(lambda x: x, range(8), faults=plan)
+        rep = fs[0].job
+        per_task = sum(t.cost_usd for t in rep.tasks)
+        assert rep.cost_usd == pytest.approx(per_task)
+        # cross-check every attempt against cost_model's Lambda pricing
+        recomputed = sum(
+            cost_model.LambdaInvocation(mem_gb=10.0, duration_s=a.billed_s).cost
+            for t in rep.tasks for a in t.attempts
+        )
+        assert rep.cost_usd == pytest.approx(recomputed, rel=1e-9)
+
+    def test_speculation_and_retries_are_billed(self):
+        plan = FaultPlan(straggles=((0, 0, 25.0),), kills=((0, 2),))
+        ex = fresh_executor()
+        fs = ex.map(lambda x: x, range(8), faults=plan)
+        rep = fs[0].job
+        nattempts = sum(len(t.attempts) for t in rep.tasks)
+        assert nattempts == 8 + 1 + 1  # primaries + retry + backup
+        assert all(
+            a.cost_usd > 0 for t in rep.tasks for a in t.attempts
+        )
+
+    def test_map_reduce_prices_comm_and_reducer(self):
+        ex = fresh_executor()
+        red = ex.map_reduce(
+            lambda x: x * x, range(16), lambda rs: sum(rs))
+        assert red.result() == sum(x * x for x in range(16))
+        rep = red.job
+        assert rep.comm_s > 0.0          # the gather rode priced CommEvents
+        assert rep.reduce_cost_usd > 0.0  # the reducer is one more invocation
+        assert rep.cost_usd == pytest.approx(
+            sum(t.cost_usd for t in rep.tasks) + rep.reduce_cost_usd
+        )
+        assert rep.total_s >= rep.init_s + rep.tasks_s
+
+    def test_map_reduce_propagates_map_failure(self):
+        def boom(x):
+            if x == 3:
+                raise ValueError("map task down")
+            return x
+
+        ex = fresh_executor(retry=RetryPolicy(max_retries=0))
+        red = ex.map_reduce(boom, range(4), sum)
+        with pytest.raises(ValueError, match="map task down"):
+            red.result()
+
+    def test_provider_rates_differentiate_cost(self):
+        plan = FaultPlan(straggles=((0, 0, 10.0),))
+        costs = {}
+        for name in ("aws-lambda", "hpc-slurm"):
+            ex = fresh_executor(
+                provider=name, mem_gb=10.0,
+                speculation=SpeculationPolicy(enabled=False))
+            costs[name] = ex.map(lambda x: x, range(4), faults=plan)[0].job.cost_usd
+        assert costs["aws-lambda"] != costs["hpc-slurm"]
+
+
+# -- partitioner --------------------------------------------------------------
+
+
+class TestPartitioner:
+    def test_discovery_lists_committed_objects(self):
+        store = S3Store()
+        store.put_objects_atomic("ds", {"b": b"22", "a": b"1"})
+        assert store.list_objects("ds") == ["a", "b"]
+        parts = partition_dataset(store, "ds", chunk_bytes=10)
+        assert [(p.key, p.start, p.stop) for p in parts] == [
+            ("a", 0, 1), ("b", 0, 2)]
+
+    def test_list_objects_uncommitted_group_raises(self):
+        assert pytest.raises(KeyError, S3Store().list_objects, "nope")
+        assert pytest.raises(
+            KeyError, LocalStore("/tmp/definitely-missing-root").list_objects, "nope")
+
+    def test_local_store_discovery(self, tmp_path):
+        store = LocalStore(tmp_path)
+        store.put_objects_atomic("g", {"x.csv": b"a,b\n1,2\n"})
+        assert store.list_objects("g") == ["x.csv"]
+
+    @given(
+        st.lists(st.integers(min_value=0, max_value=5000),
+                 min_size=1, max_size=5),
+        st.integers(min_value=1, max_value=7000),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_partitions_tile_every_byte_exactly_once(self, sizes, chunk):
+        store = S3Store()
+        objects = {f"o{i}": bytes(s % 251 for s in range(n))
+                   for i, n in enumerate(sizes)}
+        store.put_objects_atomic("ds", objects)
+        parts = partition_dataset(store, "ds", chunk_bytes=chunk)
+        seen: dict = {}
+        for p in parts:
+            assert 0 <= p.start < p.stop <= p.object_size
+            assert p.stop - p.start <= chunk
+            for off in range(p.start, p.stop):
+                key = (p.key, off)
+                assert key not in seen, f"byte {key} covered twice"
+                seen[key] = p.index
+        assert len(seen) == sum(len(v) for v in objects.values())
+        assert [p.index for p in parts] == list(range(len(parts)))
+        # ranged reads reassemble each object bit-exactly
+        for name, blob in objects.items():
+            got = b"".join(p.read(store) for p in parts if p.key == name)
+            assert got == blob
+
+    def test_explicit_keys_subset(self):
+        store = S3Store()
+        store.put_objects_atomic("ds", {"a": b"123", "b": b"456"})
+        parts = partition_dataset(store, "ds", chunk_bytes=2, keys=["b"])
+        assert {p.key for p in parts} == {"b"}
+
+    def test_bad_chunk_bytes(self):
+        with pytest.raises(ValueError):
+            partition_dataset(S3Store(), "ds", chunk_bytes=0)
+
+
+# -- out-of-core CSV ETL ------------------------------------------------------
+
+
+class TestCsvEtl:
+    @staticmethod
+    def _dataset(n=200, newline_at_end=True):
+        rng = np.random.default_rng(7)
+        a = rng.random(n)
+        b = rng.integers(0, 50, n).astype(float)
+        text = "\n".join(
+            ["a,b"] + [f"{float(a[i])},{float(b[i])}" for i in range(n)])
+        if newline_at_end:
+            text += "\n"
+        return a, b, text.encode()
+
+    @pytest.mark.parametrize("chunk_bytes", [17, 256, 10**6])
+    @pytest.mark.parametrize("newline_at_end", [True, False])
+    def test_partitioned_parse_equals_whole_file(self, chunk_bytes, newline_at_end):
+        a, b, csv = self._dataset(newline_at_end=newline_at_end)
+        store = S3Store()
+        store.put_objects_atomic("ds", {"t.csv": csv})
+        tables = dfio.etl_csv(store, "ds", "t.csv", chunk_bytes=chunk_bytes)
+        got_a = np.concatenate([t.to_numpy()["a"] for t in tables])
+        got_b = np.concatenate([t.to_numpy()["b"] for t in tables])
+        np.testing.assert_allclose(got_a, a)
+        np.testing.assert_allclose(got_b, b)
+
+    def test_etl_through_job_executor_is_priced(self):
+        a, _, csv = self._dataset()
+        store = S3Store()
+        store.put_objects_atomic("ds", {"t.csv": csv})
+        ex = fresh_executor()
+        tables = dfio.etl_csv(
+            store, "ds", "t.csv", chunk_bytes=512, executor=ex)
+        got = np.concatenate([t.to_numpy()["a"] for t in tables])
+        np.testing.assert_allclose(got, a)
+        rep = ex.reports[-1]
+        assert rep.ntasks == len(tables)
+        assert rep.cost_usd > 0
+
+    def test_read_header(self):
+        store = S3Store()
+        store.put_objects_atomic("ds", {"t.csv": b"x, y ,z\n1,2,3\n"})
+        assert dfio.read_header(store, "ds", "t.csv") == ["x", "y", "z"]
+
+
+# -- unified run-construction API ---------------------------------------------
+
+
+class TestResolveProvider:
+    def test_name_and_default(self):
+        assert resolve_provider("aws-lambda") is netsim.get_provider("aws-lambda")
+        assert resolve_provider() is netsim.get_provider("aws-lambda")
+        prof = netsim.get_provider("hpc-slurm")
+        assert resolve_provider(prof) is prof
+
+    def test_channel_maps_to_owning_provider(self):
+        assert resolve_provider(channel="ec2-direct") is netsim.get_provider("aws-ec2")
+        assert resolve_provider(channel="hpc-direct") is netsim.get_provider("hpc-slurm")
+
+    def test_staged_channel_derives_profile(self):
+        p = resolve_provider(channel="redis")
+        assert p.direct is netsim.CHANNELS["redis"]
+        assert p.platform is netsim.get_provider("aws-lambda").platform
+        assert resolve_provider(channel="redis") is p  # cached, stable identity
+
+    def test_channel_env_warns_and_maps(self):
+        with pytest.warns(DeprecationWarning):
+            p = resolve_provider(channel_env="s3")
+        assert p.direct is netsim.CHANNELS["s3"]
+
+    def test_conflicting_combinations_raise(self):
+        with pytest.raises(ValueError):
+            resolve_provider("aws-ec2", channel="redis")
+        with pytest.raises(ValueError):
+            resolve_provider(channel="redis", channel_env="s3")
+        with pytest.raises(ValueError):
+            resolve_provider("no-such-provider")
+
+    def test_resolve_channel(self):
+        assert resolve_channel("direct") is netsim.CHANNELS["direct"]
+        ch = netsim.CHANNELS["redis"]
+        assert resolve_channel(ch) is ch
+        with pytest.raises(ValueError):
+            resolve_channel("no-such-channel")
+
+    def test_bsp_accepts_provider(self):
+        rt = BSPRuntime(4, provider="hpc-slurm")
+        assert rt.platform is netsim.get_provider("hpc-slurm").platform
+        states, rep = rt.run(
+            [("s", lambda r, st_, comm, w: (st_ or 0) + 1)], [0] * 4)
+        assert states == [1] * 4
+
+    def test_bsp_channel_env_deprecated_but_works(self):
+        with pytest.warns(DeprecationWarning):
+            rt = BSPRuntime(2, channel_env="redis")
+        assert rt.comm.channel is netsim.CHANNELS["redis"]
+
+    def test_bsp_session_conflict_raises(self):
+        s = session_mod.CommSession.bootstrap(
+            4, session_mod.Fabric(platform=netsim.LAMBDA_10GB))
+        with pytest.raises(ValueError, match="session"):
+            BSPRuntime(4, session=s, channel_env="redis")
+        with pytest.raises(ValueError, match="session"):
+            BSPRuntime(4, session=s, provider="aws-ec2")
+
+    def test_make_communicator_provider_param(self):
+        from repro.core import make_communicator
+
+        c = make_communicator(4, provider="aws-ec2")
+        assert c.channel is netsim.get_provider("aws-ec2").direct
+        with pytest.raises(ValueError):
+            make_communicator(4, "no-such-env")
+
+
+# -- shared FaultPlan ---------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_bsp_faults_equals_legacy_injectors(self):
+        def step(rank, st_, comm, world):
+            return (st_ or 0) + 1
+
+        remaining = {1: 1}
+
+        def legacy_fail(s, r):
+            if remaining.get(r, 0) > 0 and s == 0:
+                remaining[r] -= 1
+                return True
+            return False
+
+        rt_a = BSPRuntime(4)
+        _, rep_a = rt_a.run([("a", step)], [0] * 4, fail_injector=legacy_fail)
+        rt_b = BSPRuntime(4)
+        _, rep_b = rt_b.run([("a", step)], [0] * 4,
+                            faults=FaultPlan(kills=((0, 1),)))
+        assert rep_a.supersteps[0].retries == rep_b.supersteps[0].retries == 1
+
+    def test_bsp_rejects_faults_plus_injectors(self):
+        rt = BSPRuntime(2)
+        with pytest.raises(ValueError, match="not both"):
+            rt.run([("a", lambda r, s, c, w: s)], [0] * 2,
+                   faults=FaultPlan.none(), fail_injector=lambda s, r: False)
+
+    def test_plan_deadline_drives_bsp_straggler_kill(self):
+        plan = FaultPlan(straggles=((0, 2, 10.0),), deadline_s=0.5)
+        rt = BSPRuntime(4)
+        _, rep = rt.run([("a", lambda r, s, c, w: 1)], [0] * 4, faults=plan)
+        assert rep.supersteps[0].retries == 1
+        assert rep.supersteps[0].rebootstrap_s > 0
+
+    def test_seeded_rates_are_deterministic_and_order_independent(self):
+        plan = FaultPlan(kill_rate=0.5, seed=42)
+        a, b = plan.armed(), plan.armed()
+        coords = [(s, r) for s in range(3) for r in range(8)]
+        fired_fwd = [c for c in coords if a.fail(*c)]
+        fired_rev = [c for c in reversed(coords) if b.fail(*c)]
+        assert fired_fwd == list(reversed(fired_rev))
+        assert 0 < len(fired_fwd) < len(coords)
+
+    def test_rate_kill_fires_once_per_coordinate(self):
+        plan = FaultPlan(kill_rate=1.0)
+        armed = plan.armed()
+        assert armed.fail(0, 0) is True
+        assert armed.fail(0, 0) is False  # the re-invocation succeeds
+
+    def test_scheduled_kill_count_burns_down(self):
+        armed = FaultPlan(kills=((0, 0, 2),)).armed()
+        assert [armed.fail(0, 0) for _ in range(3)] == [True, True, False]
+
+    def test_same_plan_on_both_surfaces(self):
+        plan = FaultPlan(kills=((0, 1),), straggles=((0, 0, 25.0),))
+        fs = fresh_executor(
+            speculation=SpeculationPolicy(enabled=False)).map(
+            lambda x: x, range(4), faults=plan)
+        assert fs[1].record.retries == 1
+        assert fs[0].record.attempts[0].duration_s >= 25.0
+        rt = BSPRuntime(4)
+        _, rep = rt.run([("a", lambda r, s, c, w: 1)], [0] * 4, faults=plan)
+        assert rep.supersteps[0].retries == 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultPlan(kills=((1,),))
+        with pytest.raises(ValueError):
+            FaultPlan(straggles=((0, 1),))
+        with pytest.raises(ValueError):
+            FaultPlan(kill_rate=1.5)
