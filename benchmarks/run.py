@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   hybrid_links       link-aware pricing vs hole-punch-failed pair fraction
   provider_placement deadline-vs-$ placement Pareto + burst expand vs re-bootstrap
   jobs_stragglers    jobs-layer speculation vs no-mitigation under stragglers
+  overlap            comm/compute overlap pricing (double-buffered supersteps)
 """
 
 from __future__ import annotations
@@ -34,6 +35,7 @@ def main() -> None:
         hybrid_links,
         jobs_stragglers,
         local_ops,
+        overlap,
         provider_placement,
         roofline,
         scaling_join,
@@ -54,6 +56,7 @@ def main() -> None:
         ("hybrid_links", hybrid_links),
         ("provider_placement", provider_placement),
         ("jobs_stragglers", jobs_stragglers),
+        ("overlap", overlap),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

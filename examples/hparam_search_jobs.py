@@ -1,0 +1,52 @@
+"""Hyperparameter search as a priced serverless map — grid in, $-table out.
+
+``JobExecutor.map`` fans a small grid of ``configs/`` variants (arch x
+learning rate) out to modeled serverless workers; each trial really trains
+its reduced config for a few steps on this host and reports the final loss.
+The job's :class:`~repro.jobs.executor.JobReport` prices every invocation
+(GB-seconds + per-request), so the search ends with the table the paper's
+cost model is for: which trial won, and what each one cost.
+
+    PYTHONPATH=src python examples/hparam_search_jobs.py
+"""
+
+from repro import configs
+from repro.jobs import JobExecutor
+from repro.launch.train import train
+
+GRID = [
+    {"arch": arch, "lr": lr}
+    for arch in ("minicpm-2b", "starcoder2-3b")
+    for lr in (1e-3, 3e-3)
+]
+STEPS, BATCH, SEQ_LEN = 6, 2, 32
+
+
+def trial(hp: dict) -> float:
+    cfg = configs.get(hp["arch"]).reduced()
+    _, losses = train(
+        cfg, steps=STEPS, batch=BATCH, seq_len=SEQ_LEN, lr=hp["lr"],
+        log_every=10_000, log=lambda *_: None,
+    )
+    return losses[-1]
+
+
+ex = JobExecutor(provider="aws-lambda", workers=4)
+futures = ex.map(trial, GRID)
+report = ex.reports[-1]
+
+rows = sorted(
+    (f.result(), hp, rec)
+    for f, hp, rec in zip(futures, GRID, report.tasks)
+)
+print(f"{len(GRID)} trials on {report.provider} "
+      f"({report.workers} workers, init {report.init_s:.1f}s modeled)")
+print(f"{'arch':<16} {'lr':>8} {'loss':>8} {'billed_s':>9} {'cost_usd':>11}")
+for loss, hp, rec in rows:
+    billed = sum(a.billed_s for a in rec.attempts)
+    print(f"{hp['arch']:<16} {hp['lr']:>8.0e} {loss:>8.4f} "
+          f"{billed:>9.2f} {rec.cost_usd:>11.8f}")
+best_loss, best_hp, _ = rows[0]
+print(f"winner: {best_hp['arch']} @ lr={best_hp['lr']:.0e} "
+      f"(loss {best_loss:.4f}); job total ${report.cost_usd:.8f}, "
+      f"modeled wall {report.total_s:.1f}s")

@@ -1,0 +1,60 @@
+"""Convert a raw span-timeline JSON into chrome://tracing Trace Event JSON.
+
+``--trace-out`` on ``repro.launch.train`` (and ``Tracer.to_json()`` anywhere)
+writes the raw round-trippable timeline.  This converter re-validates it (an
+overlapping hand-edited timeline fails loudly), emits the Chrome/Perfetto
+view, and prints the per-lane accounting plus the critical rank chain — the
+terminal summary of where modeled time went.
+
+Usage:
+    PYTHONPATH=src python scripts/trace_to_chrome.py trace.json \
+        [-o trace.chrome.json]
+
+Load the output in chrome://tracing or https://ui.perfetto.dev: one process
+per rank, one thread per lane (compute / comm / store / bootstrap /
+overhead), timestamps in microseconds of modeled time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.core.trace import LANES, Tracer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", type=Path,
+                    help="raw timeline JSON (Tracer.to_json / --trace-out)")
+    ap.add_argument("-o", "--out", type=Path, default=None,
+                    help="Chrome trace output (default: <trace>.chrome.json)")
+    args = ap.parse_args()
+
+    tracer = Tracer.from_json(json.loads(args.trace.read_text()))
+    out = args.out or args.trace.with_suffix(".chrome.json")
+    out.write_text(json.dumps(tracer.to_chrome()))
+
+    print(f"{args.trace}: {len(tracer.spans)} spans, "
+          f"{len(tracer.ranks())} ranks, end {tracer.end_s:.3f}s")
+    for lane in LANES:
+        t = tracer.lane_time_s(lane)
+        if t > 0.0 or any(s.lane == lane for s in tracer.spans):
+            usd = tracer.lane_usd(lane)
+            cost = f"  ${usd:.6f}" if usd else ""
+            print(f"  {lane:10s} {t:10.3f}s{cost}")
+    cp = tracer.critical_path()
+    if cp["rank"] is not None:
+        lanes = ", ".join(f"{k} {v:.3f}s" for k, v in cp["lanes"].items())
+        print(f"critical rank {cp['rank']}: chain {cp['total_s']:.3f}s ({lanes})")
+        for row in cp["steps"]:
+            print(f"  step {row['step']:3d}: rank {row['rank']} "
+                  f"chain {row['chain_s']:.4f}s")
+    print(f"wrote {out} — load in chrome://tracing or ui.perfetto.dev")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

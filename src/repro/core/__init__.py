@@ -1,6 +1,7 @@
 """Core: the paper's contribution — serverless communicator, comm sessions
 (bootstrap lifecycle + per-pair links), BSP runtime, NAT-traversal control
-plane, network/cost models, provider fabric registry + cost-aware placement."""
+plane, network/cost models, provider fabric registry + cost-aware placement,
+and the modeled-clock span timeline every priced layer emits onto."""
 
 from repro.core.netsim import (  # noqa: F401
     ProviderProfile,
@@ -25,7 +26,14 @@ from repro.core.algorithms import (  # noqa: F401
     select_algorithm,
     select_hybrid,
     select_placement,
+    overlap_pipeline_time,
     tuned_time,
+)
+from repro.core.trace import (  # noqa: F401
+    LANES,
+    Span,
+    TraceError,
+    Tracer,
 )
 from repro.core.session import (  # noqa: F401
     FABRICS,

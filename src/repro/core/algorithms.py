@@ -221,6 +221,48 @@ def _staged_chunked(
     return best, best_k
 
 
+def overlap_pipeline_time(
+    compute_s: float,
+    lat_s: float,
+    bw_s: float,
+    chunks: int | None = None,
+) -> tuple[float, int]:
+    """Modeled superstep time with comm double-buffered behind compute.
+
+    Extends the k-chunk staged pipeline above from "chunks of one
+    collective" to "chunks of one superstep": compute is split into k
+    chunks and chunk i's collective (issued non-blocking, FMI §VI) ships
+    while chunk i+1 computes.  The superstep's priced comm decomposes as
+    ``lat_s`` (latency rounds, ships concurrently with compute on the
+    network plane) + ``bw_s`` (bytes serialized at the NIC).  Chunk i's
+    bandwidth share ``bw_s/k`` starts after its compute chunk and after the
+    previous chunk drains, so the pipeline's closed form is
+
+        T(k) = max(C + B/k, C/k + B) + L
+
+    — compute-bound (everything but the last chunk's drain hides) or
+    bandwidth-bound (everything but the first compute chunk hides), plus
+    the latency of the final chunk's rounds, which nothing can hide.
+    ``T(1) == C + B + L`` is exactly the non-overlapped sum, so the min
+    over :data:`CHUNK_CANDIDATES` is never worse than today's pricing.
+    Returns ``(seconds, chunks)``; pass ``chunks=`` to pin k.
+    """
+    c = max(float(compute_s), 0.0)
+    lat = max(float(lat_s), 0.0)
+    bw = max(float(bw_s), 0.0)
+    if chunks is not None and int(chunks) < 1:
+        raise ValueError(f"chunks must be >= 1, got {chunks}")
+    candidates = (int(chunks),) if chunks is not None else CHUNK_CANDIDATES
+    best, best_k = math.inf, 1
+    for k in candidates:
+        if k < 1:
+            raise ValueError(f"chunk count must be >= 1, got {k}")
+        t = max(c + bw / k, c / k + bw) + lat
+        if t < best:
+            best, best_k = t, k
+    return best, best_k
+
+
 def algorithms_for(channel, kind: str) -> tuple[str, ...]:
     """Candidate schedule names for one (channel-or-provider, kind)."""
     channel = _as_channel(channel)

@@ -33,10 +33,12 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Sequence
 
+from repro.core import algorithms as _algorithms
 from repro.core import faults as _faults
 from repro.core import netsim
 from repro.core import session as _session
-from repro.core.communicator import Communicator
+from repro.core import trace as _trace
+from repro.core.communicator import CollectiveKind, Communicator
 
 # module reference only (attributes resolved at call time): repro.dist pulls
 # netsim back out of repro.core, so binding names here would be circular
@@ -61,11 +63,28 @@ class SuperstepReport:
     barrier_s: float
     rebootstrap_s: float = 0.0  # deadline-killed ranks re-joining the session
     expand_s: float = 0.0       # burst admission before this superstep ran
+    # overlap scheduling (run(overlap=True)): the double-buffered pipeline's
+    # modeled compute+comm time, replacing the compute_s + comm_s sum in
+    # total_s; ``chunks`` is the chunk count the pipeline chose.  None means
+    # the superstep ran strictly compute-then-communicate (today's pricing).
+    overlapped_s: float | None = None
+    chunks: int = 1
 
     @property
     def total_s(self) -> float:
-        return (self.compute_s + self.comm_s + self.barrier_s
+        phase = (
+            self.compute_s + self.comm_s
+            if self.overlapped_s is None else self.overlapped_s
+        )
+        return (phase + self.barrier_s
                 + self.rebootstrap_s + self.expand_s)
+
+    @property
+    def overlap_speedup(self) -> float:
+        """(compute + comm) / overlapped — 1.0 when not overlapped."""
+        if self.overlapped_s is None or self.overlapped_s <= 0.0:
+            return 1.0
+        return (self.compute_s + self.comm_s) / self.overlapped_s
 
 
 @dataclasses.dataclass
@@ -111,6 +130,7 @@ class BSPRuntime:
         algorithm: str = "auto",
         session: _session.CommSession | None = None,
         provider: str | netsim.ProviderProfile | None = None,
+        tracer: _trace.Tracer | None = None,
     ):
         self.world = int(world_size)
         # "Where this runs" comes from exactly one of: a pre-bootstrapped
@@ -170,6 +190,22 @@ class BSPRuntime:
         self.deadline_s = deadline_s
         self.cpu_scale = cpu_scale
         self._completed_steps = 0
+        # Every runtime owns a span timeline.  Live mirroring is off
+        # (mirror=False): run() schedules each superstep's compute, comm and
+        # bootstrap spans itself after pricing, so comm spans land after the
+        # compute they follow on the modeled clock.  Bootstrap events already
+        # in the session log are backfilled as bootstrap-lane spans.
+        if tracer is None:
+            tracer = session.tracer
+        if tracer is None:
+            tracer = _trace.Tracer()
+        if session.tracer is not tracer:
+            session.attach_tracer(tracer, mirror=False, backfill=True)
+        else:
+            session._mirror = False
+        self.tracer = tracer
+        if self.checkpoint_store is not None:
+            self.checkpoint_store.attach_tracer(tracer)
 
     # -- checkpointing --------------------------------------------------------
     #
@@ -247,6 +283,96 @@ class BSPRuntime:
                 states = list(states) + [None] * int(new_ranks)
         return states, expand_s
 
+    # -- span timeline --------------------------------------------------------
+
+    def _trace_superstep(
+        self,
+        idx: int,
+        name: str,
+        rank_elapsed: list[float],
+        step_events: list,
+        expand_s: float,
+        reboot_s: float,
+        barrier_s: float,
+        overlapped_s: float | None,
+        chunks: int,
+        lat_s: float,
+        bw_s: float,
+    ) -> None:
+        """Schedule one superstep's spans on the modeled timeline.
+
+        overlap=False order: expand -> per-rank compute -> rebootstrap ->
+        each comm event sequentially -> barrier, so the superstep window
+        equals ``SuperstepReport.total_s``.  overlap=True emits the chunked
+        double-buffer pipeline: rank r's compute is split into ``chunks``
+        equal spans; comm chunk i (bandwidth share bw/k) starts once chunk i
+        has been computed everywhere and the previous comm chunk drained; the
+        latency rounds of the final chunk are the unhideable tail.
+        """
+        tr = self.tracer
+        ranks = range(self.world)
+        compute_s = max(rank_elapsed, default=0.0)
+        t0 = tr.end_s
+        if expand_s > 0.0:
+            for r in ranks:
+                tr.span(r, "bootstrap", "expand", t0=t0,
+                        duration_s=expand_s, step=idx)
+        t1 = t0 + expand_s
+        if overlapped_s is None:
+            for r in ranks:
+                if rank_elapsed[r] > 0.0:
+                    tr.span(r, "compute", name, t0=t1,
+                            duration_s=rank_elapsed[r], step=idx)
+            t = t1 + compute_s
+            if reboot_s > 0.0:
+                for r in ranks:
+                    tr.span(r, "bootstrap", "rebootstrap", t0=t,
+                            duration_s=reboot_s, step=idx)
+            t += reboot_s
+            for ev in step_events:
+                for r in ranks:
+                    tr.span(r, "comm", ev.kind.value, t0=t,
+                            duration_s=ev.time_s, nbytes=ev.total_bytes,
+                            step=idx, algo=ev.algo)
+                t += ev.time_s
+        else:
+            k = max(int(chunks), 1)
+            c_max = compute_s / k
+            for r in ranks:
+                c_r = rank_elapsed[r] / k
+                if c_r > 0.0:
+                    for i in range(k):
+                        tr.span(r, "compute", f"{name}#c{i}",
+                                t0=t1 + i * c_r, duration_s=c_r, step=idx)
+            # pipeline recursion: f_i = max((i+1)*c_max, f_{i-1}) + bw/k;
+            # f_{k-1} + lat == t1 + overlapped_s (the closed form's schedule)
+            f_prev = t1
+            if bw_s > 0.0:
+                b = bw_s / k
+                for i in range(k):
+                    s_i = max(t1 + (i + 1) * c_max, f_prev)
+                    for r in ranks:
+                        tr.span(r, "comm", f"overlap#c{i}", t0=s_i,
+                                duration_s=b, step=idx, chunks=k)
+                    f_prev = s_i + b
+            else:
+                f_prev = t1 + compute_s
+            if lat_s > 0.0 and step_events:
+                for r in ranks:
+                    tr.span(r, "comm", "latency", t0=f_prev,
+                            duration_s=lat_s, step=idx)
+                f_prev += lat_s
+            t = max(f_prev, t1 + compute_s)
+            if reboot_s > 0.0:
+                for r in ranks:
+                    tr.span(r, "bootstrap", "rebootstrap", t0=t,
+                            duration_s=reboot_s, step=idx)
+            t += reboot_s
+        if barrier_s > 0.0:
+            for r in ranks:
+                tr.span(r, "comm", "barrier", t0=t,
+                        duration_s=barrier_s, step=idx)
+
     # -- execution ------------------------------------------------------------
 
     def run(
@@ -259,6 +385,8 @@ class BSPRuntime:
         max_retries: int = 2,
         burst: Burst | None = None,
         faults: _faults.FaultPlan | None = None,
+        overlap: bool = False,
+        overlap_chunks: int | None = None,
     ) -> tuple[list[Any], RunReport]:
         """Execute `supersteps` over per-rank `init_states`.
 
@@ -273,6 +401,15 @@ class BSPRuntime:
         ``burst`` admits extra workers before superstep ``burst.at_step``
         runs; a run resumed *past* that step must already be at the expanded
         world (the checkpoint recorded it), so the burst is skipped.
+
+        ``overlap=True`` double-buffers each superstep: compute is split into
+        k chunks and chunk i's collective traffic (its bandwidth share)
+        drains while chunk i+1 computes, so the superstep prices
+        ``max(compute, comm)`` per chunk plus the unhideable latency rounds
+        (:func:`repro.core.algorithms.overlap_pipeline_time`; pin k with
+        ``overlap_chunks``).  ``overlap=False`` (default) reproduces the
+        strict compute-then-communicate totals bit-exactly.  Either way every
+        superstep is scheduled on ``self.tracer``'s modeled timeline.
         """
         if faults is not None and (
             fail_injector is not None or straggle_injector is not None
@@ -315,6 +452,7 @@ class BSPRuntime:
                     joined_at[r] = idx
             self.comm.reset_events()
             max_rank_s = 0.0
+            rank_elapsed: list[float] = [0.0] * self.world
             retries = 0
             reboot_s = 0.0
             new_states: list[Any] = [None] * self.world
@@ -355,10 +493,28 @@ class BSPRuntime:
                         reboot_s += self.session.rebootstrap_rank(rank)
                         continue
                     new_states[rank] = out
+                    rank_elapsed[rank] = elapsed
                     max_rank_s = max(max_rank_s, elapsed)
                     break
             states = new_states
             comm_s = self.comm.comm_time_s
+            # this superstep's collectives: reset_events() cleared the last
+            # step's and kept only BOOTSTRAP entries (init/reboot/expand)
+            step_events = [
+                ev for ev in self.session.events
+                if ev.kind is not CollectiveKind.BOOTSTRAP
+            ]
+            overlapped_s = None
+            chunks = 1
+            lat_s = bw_s = 0.0
+            if overlap:
+                for ev in step_events:
+                    ev_lat, ev_bw = self.comm.event_lat_bw(ev)
+                    lat_s += ev_lat
+                    bw_s += ev_bw
+                overlapped_s, chunks = _algorithms.overlap_pipeline_time(
+                    max_rank_s, lat_s, bw_s, chunks=overlap_chunks
+                )
             # priced through the communicator so a hybrid session's relayed
             # pairs gate the superstep barrier too (link-aware)
             barrier_s = self.comm.collective_time_s("barrier", 0)
@@ -366,7 +522,12 @@ class BSPRuntime:
                 SuperstepReport(
                     idx, name, max_rank_s, comm_s, retries, barrier_s,
                     rebootstrap_s=reboot_s, expand_s=expand_s,
+                    overlapped_s=overlapped_s, chunks=chunks,
                 )
+            )
+            self._trace_superstep(
+                idx, name, rank_elapsed, step_events, expand_s, reboot_s,
+                barrier_s, overlapped_s, chunks, lat_s, bw_s,
             )
             self._save(idx, states)
             self._completed_steps = idx + 1

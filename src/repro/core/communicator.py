@@ -51,6 +51,23 @@ name prices that schedule explicitly.  The chosen schedule lands in
                                 monolithic PUT-then-GET except for tiny
                                 non-alltoall payloads on redis; k grows with
                                 the payload.
+    any (overlap)   direct      overlapped-chunked: under ``BSPRuntime.run(
+                                overlap=True)`` the superstep splits into k
+                                compute chunks and chunk i's collective ships
+                                while chunk i+1 computes — the bandwidth term
+                                hides behind compute (``max`` replaces the
+                                sum), the latency rounds of the final chunk
+                                stay on the critical path.  Wins when the
+                                payload is bandwidth-bound (>= ~8 MiB
+                                allreduce at world 64); latency-bound events
+                                fall back to k=1 = today's price.
+    any (overlap)   redis / s3  overlapped-chunked over the staged pipeline:
+                                per-object processing is the latency term, the
+                                ``2 T B`` store stream is the bandwidth term —
+                                store-heavy supersteps overlap well even at
+                                1 MiB (latency is a few round-trips, not
+                                log2(P) punched rounds).  See
+                                ``algorithms.overlap_pipeline_time``.
 
 The paper's Fig 12 observation that AllReduce is *latency-bound* at 32 nodes
 is exactly why recursive doubling halves the modeled time there, and why the
@@ -351,8 +368,50 @@ class Communicator:
             relay=relay_name,
             relayed_pairs=len(self._links.relayed) if relay_name else 0,
         )
-        self.events.append(ev)
+        # the session owns the log (and mirrors onto an attached tracer);
+        # self.events stays the same aliased list, so existing consumers of
+        # the per-event view are untouched
+        self.session.log_event(ev, group=self.group)
         return ev
+
+    def event_lat_bw(self, ev: CommEvent) -> tuple[float, float]:
+        """Decompose one logged event's price into (latency, bandwidth)
+        seconds — the split the overlap scheduler pipelines on.
+
+        Latency is the same schedule re-priced at zero bytes (the rounds /
+        store round-trips that don't shrink with the payload); bandwidth is
+        the remainder.  The split is exact by construction:
+        ``lat + bw == ev.time_s`` always, with ``bw`` clamped at 0 so a
+        zero-byte event is pure latency.  Events whose schedule can't be
+        re-priced (unknown or composite names) degrade to pure latency —
+        the conservative choice, since latency is what overlap can't hide.
+        """
+        if ev.kind is CollectiveKind.BOOTSTRAP or ev.time_s <= 0.0:
+            return ev.time_s, 0.0
+        algo = ev.algo
+        try:
+            if algo == "fixed":
+                lat = netsim.collective_time(self.channel, ev.kind.value, ev.world, 0)
+            elif algo.endswith("+relay"):
+                lat = _algorithms.hybrid_algorithm_time(
+                    self._links, ev.kind.value, 0, algo[: -len("+relay")]
+                )
+            elif algo.endswith("@relay"):
+                base = algo[: -len("@relay")]
+                if base == "p2p":
+                    lat = ev.time_s  # endpoint-priced ping/send: no pipeline
+                else:
+                    lat = _algorithms.algorithm_time(
+                        self._links.fallback, ev.kind.value, ev.world, 0, base
+                    )
+            else:
+                lat = _algorithms.algorithm_time(
+                    self.channel, ev.kind.value, ev.world, 0, algo
+                )
+        except (ValueError, KeyError):
+            lat = ev.time_s
+        bw = max(ev.time_s - lat, 0.0)
+        return ev.time_s - bw, bw
 
     def _local(self, rank: int) -> int:
         """Local index of a local rank (identity; validates range)."""

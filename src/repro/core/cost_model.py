@@ -155,6 +155,59 @@ def join_cost(
     )
 
 
+def relay_egress_cost(
+    session,
+    events=None,
+    *,
+    default_provider: str = "aws-lambda",
+) -> list[float]:
+    """Per-rank egress dollars for relay traffic crossing a provider boundary.
+
+    Hole-punch-failed pairs relay every collective's payload through a
+    mediator; when the two endpoints sit on *different* providers that
+    traffic leaves each provider's network and is metered at its
+    ``ProviderProfile.egress_usd_per_gb`` rate.  For each non-bootstrap
+    event in ``events`` (default: the session log) and each currently
+    relayed cross-provider pair inside that event's world, both endpoint
+    ranks pay ``bytes_per_rank`` at their own provider's rate.  Same-provider
+    worlds — even fully relayed ones — bill $0: intra-provider relay traffic
+    never crosses the boundary.
+    """
+    from repro.core import netsim
+    from repro.core.communicator import CollectiveKind
+
+    if events is None:
+        events = session.events
+
+    def _provider(rank: int) -> str:
+        name = None
+        if rank < len(session.rank_providers):
+            name = session.rank_providers[rank]
+        return name or default_provider
+
+    per_rank = [0.0] * session.world
+    pairs = [
+        (a, b)
+        for a, b in session.link_map.relayed_pairs()
+        if _provider(a) != _provider(b)
+    ]
+    if not pairs:
+        return per_rank
+    rate = {
+        r: netsim.get_provider(_provider(r)).egress_usd_per_gb
+        for pair in pairs for r in pair
+    }
+    for ev in events:
+        if ev.kind is CollectiveKind.BOOTSTRAP:
+            continue
+        gb = ev.bytes_per_rank / 1e9
+        for a, b in pairs:
+            if a < ev.world and b < ev.world:
+                per_rank[a] += gb * rate[a]
+                per_rank[b] += gb * rate[b]
+    return per_rank
+
+
 def heterogeneous_run_cost(
     report,
     session,
@@ -171,12 +224,16 @@ def heterogeneous_run_cost(
     :class:`repro.core.bsp.RunReport` (``joined_at`` maps burst ranks to
     their join step); ``session`` supplies per-rank providers
     (``CommSession.rank_providers``, ``default_provider`` standing in for
-    pre-registry fabrics).  Returns ``{"total_usd", "per_rank_usd",
-    "per_provider_usd"}``.
+    pre-registry fabrics).  Relay traffic between ranks on *different*
+    providers additionally bills each endpoint's
+    ``egress_usd_per_gb`` (:func:`relay_egress_cost`) into its per-rank
+    total.  Returns ``{"total_usd", "per_rank_usd", "per_provider_usd",
+    "egress_usd"}`` with ``total_usd == sum(per_rank_usd)``.
     """
     from repro.core import netsim
 
     step_total = {s.index: s.total_s for s in report.supersteps}
+    egress = relay_egress_cost(session, default_provider=default_provider)
     per_rank: list[float] = []
     per_provider: dict[str, float] = {}
     for rank in range(report.world):
@@ -190,12 +247,15 @@ def heterogeneous_run_cost(
         else:
             wall = sum(t for i, t in step_total.items() if i >= joined)
         cost = prov.invocation_cost(mem_gb, wall)
+        if rank < len(egress):
+            cost += egress[rank]
         per_rank.append(cost)
         per_provider[prov.name] = per_provider.get(prov.name, 0.0) + cost
     return {
         "total_usd": sum(per_rank),
         "per_rank_usd": per_rank,
         "per_provider_usd": per_provider,
+        "egress_usd": sum(egress),
     }
 
 

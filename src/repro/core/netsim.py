@@ -195,6 +195,10 @@ class ProviderProfile:
     usd_per_gb_s: float = 0.0
     usd_per_request: float = 0.0
     nat_blocked_rate: float = 0.0
+    # billed per GB a worker on this provider sends to *another* provider
+    # (relay traffic crossing the provider boundary); intra-provider traffic
+    # is free on every preset, so a homogeneous world pays $0 egress
+    egress_usd_per_gb: float = 0.0
 
     @property
     def relay_channel(self) -> ChannelModel:
@@ -252,6 +256,7 @@ AWS_LAMBDA = register_provider(ProviderProfile(
     direct=LAMBDA_DIRECT, staged=(REDIS_STAGED, S3_STAGED), relay=REDIS_STAGED,
     usd_per_gb_s=0.0000166667, usd_per_request=0.20 / 1e6,
     nat_blocked_rate=0.0,  # the paper achieved full traversal on Lambda
+    egress_usd_per_gb=0.09,  # AWS internet-egress tier ($0.09/GB)
 ))
 AWS_EC2 = register_provider(ProviderProfile(
     name="aws-ec2", kind="serverful", platform=EC2_XL,
@@ -259,6 +264,7 @@ AWS_EC2 = register_provider(ProviderProfile(
     # m3.xlarge $0.266/hr over 15 GB => equivalent GB-second rate
     usd_per_gb_s=0.266 / 3600.0 / 15.0, usd_per_request=0.0,
     nat_blocked_rate=0.0,  # placement group: no NAT between instances
+    egress_usd_per_gb=0.09,  # AWS internet-egress tier ($0.09/GB)
 ))
 
 # -- non-AWS presets ----------------------------------------------------------
@@ -278,6 +284,7 @@ GCP_CLOUDRUN = register_provider(ProviderProfile(
     direct=CLOUDRUN_DIRECT, staged=(REDIS_STAGED,), relay=REDIS_STAGED,
     usd_per_gb_s=0.0000121, usd_per_request=0.40 / 1e6,
     nat_blocked_rate=0.05,
+    egress_usd_per_gb=0.12,  # GCP premium-tier internet egress ($0.12/GB)
 ))
 
 # Slurm-style HPC allocation: Rivanna-class interconnect and CPUs, near-zero
@@ -293,6 +300,7 @@ HPC_SLURM = register_provider(ProviderProfile(
     direct=HPC_DIRECT, staged=(REDIS_STAGED,), relay=REDIS_STAGED,
     usd_per_gb_s=0.10 / 3600.0 / 10.0, usd_per_request=0.0,
     nat_blocked_rate=0.0,
+    egress_usd_per_gb=0.0,  # campus HPC: no metered egress
 ))
 
 

@@ -255,6 +255,12 @@ class CommSession:
         self.fabric = fabric
         self.server = server
         self.events: list[CommEvent] = events if events is not None else []
+        # optional span timeline (repro.core.trace.Tracer): when attached,
+        # every logged event is mirrored as a comm/bootstrap span; the
+        # events list itself stays the thin per-event view it always was
+        self.tracer = None
+        self.trace_ranks: tuple[int, ...] | None = None
+        self._mirror = True
         # per-rank provider names (None for pre-registry fabrics); expand()
         # appends to this as it grows the world
         base = fabric.provider if fabric is not None else None
@@ -423,6 +429,53 @@ class CommSession:
         ]
         self.events[:] = kept
 
+    # -- span timeline --------------------------------------------------------
+
+    def attach_tracer(
+        self,
+        tracer,
+        ranks: "tuple[int, ...] | None" = None,
+        mirror: bool = True,
+        backfill: bool = True,
+    ):
+        """Emit this session's priced events onto a span timeline.
+
+        ``tracer`` is a :class:`repro.core.trace.Tracer`.  Events already in
+        the log (the bootstrap history) are backfilled as spans; every event
+        logged afterwards is mirrored live while ``mirror`` is True.  A
+        scheduler that owns span placement itself (``BSPRuntime`` lays comm
+        spans *after* the superstep's compute) passes ``mirror=False`` and
+        keeps the backfill.  ``ranks`` restricts mirroring to those ranks
+        (``launch/train.py`` traces the one worker it models, rank 0);
+        default: every rank participating in each event.
+        """
+        self.tracer = tracer
+        self.trace_ranks = None if ranks is None else tuple(int(r) for r in ranks)
+        self._mirror = bool(mirror)
+        if backfill:
+            for ev in self.events:
+                self._mirror_event(ev, group=None)
+        return tracer
+
+    def _mirror_event(self, ev, group=None) -> None:
+        if self.tracer is None:
+            return
+        ranks = tuple(group) if group is not None else tuple(range(ev.world))
+        if self.trace_ranks is not None:
+            ranks = tuple(r for r in ranks if r in self.trace_ranks)
+        if ranks:
+            self.tracer.ingest_comm_event(ev, ranks)
+
+    def log_event(self, ev, group=None):
+        """Append one priced event to the shared log, mirroring it onto the
+        attached tracer (if any).  ``group`` is the global-rank tuple the
+        event spans — sub-communicators pass theirs so the span lands on
+        the right lanes."""
+        self.events.append(ev)
+        if self._mirror:
+            self._mirror_event(ev, group=group)
+        return ev
+
     # -- handles --------------------------------------------------------------
 
     def communicator(self, algorithm: str = "auto") -> "Communicator":
@@ -458,7 +511,7 @@ class CommSession:
             # rendezvous + one re-punch per tree level (the calibrated
             # closed form, so rebootstrap can never drift from bootstrap)
             t = self.fabric.platform.init_time(self.world)
-        self.events.append(CommEvent(
+        self.log_event(CommEvent(
             CollectiveKind.BOOTSTRAP, self.world, 0, t, algo=f"rebootstrap_r{int(rank)}",
         ))
         return t
@@ -533,7 +586,7 @@ class CommSession:
         def emit(t, algo, **kw):
             nonlocal total
             total += t
-            self.events.append(CommEvent(
+            self.log_event(CommEvent(
                 CollectiveKind.BOOTSTRAP, new_world, 0, t, algo=algo, **kw,
             ))
 

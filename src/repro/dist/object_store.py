@@ -83,16 +83,44 @@ class Store:
 
     def __init__(self):
         self.ops: list[StoreOp] = []
+        # optional span timeline (repro.core.trace.Tracer): ops mirror onto
+        # the "store" lane of trace_rank; the op log stays the thin view
+        self.tracer = None
+        self.trace_rank = 0
 
     # -- op accounting -------------------------------------------------------
+
+    def attach_tracer(self, tracer, rank: int = 0):
+        """Mirror every logged op as a ``store``-lane span of ``rank`` on
+        the given :class:`repro.core.trace.Tracer` (per-op request billing
+        rides along as ``Span.usd``)."""
+        self.tracer = tracer
+        self.trace_rank = int(rank)
+        return tracer
+
+    def _op_usd(self, op: StoreOp) -> float:
+        """Request billing for one op (the per-op share of
+        :meth:`request_cost_usd`)."""
+        if op.kind == "put":
+            return S3_USD_PER_PUT
+        if op.kind == "get":
+            return S3_USD_PER_GET
+        return 0.0
 
     def _price(self, kind: str, nbytes: int) -> float:
         return 0.0
 
-    def _record(self, kind: str, key: str, nbytes: int) -> StoreOp:
-        op = StoreOp(kind, key, int(nbytes), self._price(kind, int(nbytes)))
+    def _emit(self, op: StoreOp) -> StoreOp:
+        """Log one op, mirroring it onto the attached tracer (if any)."""
         self.ops.append(op)
+        if self.tracer is not None:
+            self.tracer.ingest_store_op(op, self.trace_rank, usd=self._op_usd(op))
         return op
+
+    def _record(self, kind: str, key: str, nbytes: int) -> StoreOp:
+        return self._emit(
+            StoreOp(kind, key, int(nbytes), self._price(kind, int(nbytes)))
+        )
 
     @property
     def op_time_s(self) -> float:
@@ -190,6 +218,9 @@ class LocalStore(Store):
 
     def request_cost_usd(self) -> float:
         return 0.0  # local disk: no per-request pricing
+
+    def _op_usd(self, op: StoreOp) -> float:
+        return 0.0
 
     def _housekeep(self) -> None:
         """Recover interrupted publishes, then sweep writer garbage.
@@ -397,7 +428,7 @@ class S3Store(Store):
             chunk = data[start or 0: stop]
             lat = per_request if self._ranged_seq % pool == 0 else 0.0
             self._ranged_seq += 1
-            self.ops.append(StoreOp(
+            self._emit(StoreOp(
                 "get", f"{group}/{name}", len(chunk),
                 lat + len(chunk) * self.channel.beta_s_per_byte,
             ))

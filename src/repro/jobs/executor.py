@@ -48,7 +48,8 @@ import numpy as np
 from repro.core import faults as _faults
 from repro.core import netsim
 from repro.core import session as _session
-from repro.core.communicator import Communicator
+from repro.core import trace as _trace
+from repro.core.communicator import CollectiveKind, Communicator
 from repro.jobs.futures import Future
 
 
@@ -116,6 +117,7 @@ class TaskRecord:
     done_s: float = float("inf")   # modeled completion of the winning attempt
     winner: str = "primary"        # "primary" | "speculative"
     error: str | None = None       # set when the retry budget was exhausted
+    slot: int = 0                  # invocation slot the primary attempts ran on
 
     @property
     def retries(self) -> int:
@@ -146,6 +148,7 @@ class JobReport:
     comm_s: float = 0.0         # gather/shuffle time (priced CommEvents)
     reduce_s: float = 0.0       # reducer invocation compute
     reduce_cost_usd: float = 0.0
+    trace_base_s: float = 0.0   # tracer offset of this job's task t=0
 
     @property
     def tasks_s(self) -> float:
@@ -217,6 +220,7 @@ class JobExecutor:
         speculation: SpeculationPolicy | None = None,
         cpu_scale: float = 1.0,
         algorithm: str = "auto",
+        tracer: "_trace.Tracer | None" = None,
     ):
         # the ONLY run-location path: the PR 6 registry via resolve_provider
         self.provider = netsim.resolve_provider(provider)
@@ -236,6 +240,11 @@ class JobExecutor:
         )
         self.cpu_scale = float(cpu_scale)
         self.algorithm = algorithm
+        # every job lays its timeline onto this tracer: bootstrap spans from
+        # the job session, task attempts on per-slot compute lanes (backups
+        # on fresh lanes past the slots), gather + reduce for map_reduce.
+        # Jobs append end-to-end, so one executor = one modeled timeline.
+        self.tracer = tracer if tracer is not None else _trace.Tracer()
         self.reports: list[JobReport] = []
         self._job_seq = 0
 
@@ -348,6 +357,32 @@ class JobExecutor:
                 rec.winner = "speculative"
                 rec.done_s = backup_end
 
+    def _trace_job(self, report: JobReport) -> None:
+        """Lay the job's task attempts onto the tracer's compute lanes.
+
+        Primary attempts (and retries) go on the slot's lane — slot packing
+        is earliest-free, so per-lane spans are already monotone.
+        Speculative backups ran on fresh workers, so each gets a fresh lane
+        past the slot lanes (lane exclusivity would otherwise reject a
+        backup racing its own slot).
+        """
+        tr = self.tracer
+        base = report.trace_base_s
+        backup_rank = report.workers
+        for rec in report.tasks:
+            for a_i, a in enumerate(rec.attempts):
+                if a.speculative:
+                    rank = backup_rank
+                    backup_rank += 1
+                else:
+                    rank = rec.slot
+                tr.span(
+                    rank, "compute", f"task{rec.index}",
+                    t0=base + a.start_s, duration_s=a.duration_s,
+                    usd=a.cost_usd, job=report.job_id, task=rec.index,
+                    attempt=a_i, status=a.status, speculative=a.speculative,
+                )
+
     # -- API -----------------------------------------------------------------
 
     def map(
@@ -372,10 +407,14 @@ class JobExecutor:
         sess = _session.CommSession.bootstrap(slots, self.fabric)
         if _session_holder is not None:
             _session_holder.append(sess)
+        # backfill lays the bootstrap spans; live mirroring stays off because
+        # map_reduce schedules its gather explicitly after the map phase
+        sess.attach_tracer(self.tracer, mirror=False, backfill=True)
         report = JobReport(
             job_id=job_id, kind=_kind, provider=self.provider.name,
             mem_gb=self.mem_gb, ntasks=len(args), workers=slots,
             init_s=sess.bootstrap_time_s,
+            trace_base_s=self.tracer.end_s,
         )
         slot_free = [0.0] * slots
         records: list[TaskRecord] = []
@@ -385,6 +424,7 @@ class JobExecutor:
             slot = int(np.argmin(slot_free))
             rec, res, base = self._run_task(
                 fn, arg, i, slot_free[slot], armed, plan.deadline_s)
+            rec.slot = slot
             slot_free[slot] = rec.done_s if rec.done_s != float("inf") \
                 else rec.attempts[-1].end_s
             records.append(rec)
@@ -392,6 +432,7 @@ class JobExecutor:
             bases.append(base)
         self._speculate(records, bases)
         report.tasks = records
+        self._trace_job(report)
         self.reports.append(report)
         futures = []
         for rec, res in zip(records, results):
@@ -463,6 +504,20 @@ class JobExecutor:
         )
         report.reduce_s = red_s
         report.reduce_cost_usd = self._bill(red_s)
+        # timeline: the gather starts once the last winning map task is in,
+        # the reducer once the gather drains (rank 0 = the reducer slot)
+        tr = self.tracer
+        t_comm = report.trace_base_s + report.tasks_s
+        for ev in comm.events:
+            if ev.kind is CollectiveKind.BOOTSTRAP:
+                continue
+            spans = tr.ingest_comm_event(ev, range(report.workers), t0=t_comm)
+            t_comm = max(s.t1 for s in spans)
+        tr.span(
+            0, "compute", "reduce",
+            t0=max(t_comm, tr.lane_end(0, "compute")), duration_s=red_s,
+            usd=report.reduce_cost_usd, job=report.job_id,
+        )
         return Future(
             report.job_id, -1, report.total_s,
             result=reduced, record=None, job=report,

@@ -24,7 +24,7 @@ from repro import configs
 from repro.data import pipeline
 from repro.dist import checkpoint as ckpt
 from repro.dist import compression
-from repro.dist.object_store import Store
+from repro.dist.object_store import Store, as_store
 from repro.models import api
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
@@ -80,6 +80,7 @@ def train(
     burst_at: int | None = None,
     burst_world: int = 0,
     burst_provider: str | None = None,
+    tracer=None,
     log=print,
 ):
     """Train ``cfg`` for ``steps`` steps.
@@ -103,6 +104,15 @@ def train(
     priced fabric, never the single-host training math, so kill/resume
     traces stay identical; a run resumed *past* the burst step re-applies
     the expansion to its fresh session so the modeled world matches.
+
+    ``tracer`` (a :class:`repro.core.trace.Tracer`) collects the run's full
+    modeled timeline on rank 0's lanes: per-step ``compute`` spans (measured
+    step time), ``overhead`` spans for data fetch, ``store`` spans for every
+    checkpoint op, ``bootstrap`` spans mirrored from the session lifecycle,
+    and — when a ``comm_session`` models the worker fabric — one ``comm``
+    span per step for the modeled gradient all-reduce over that session's
+    world.  Export it with ``Tracer.to_chrome()`` or via
+    ``python -m repro.launch.train --trace-out trace.json``.
     """
     opt_cfg = opt.OptConfig(
         lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps,
@@ -110,6 +120,28 @@ def train(
     )
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     opt_state = opt.init_state(params, opt_cfg)
+
+    grad_comm = None
+    grad_nbytes = 0
+    if tracer is not None:
+        if comm_session is not None:
+            # live mirroring: rebootstrap/expand events land as rank-0
+            # bootstrap spans the moment the session prices them
+            comm_session.attach_tracer(tracer, ranks=(0,))
+            from repro.core.communicator import Communicator
+
+            grad_comm = Communicator(session=comm_session)
+            grad_nbytes = int(sum(
+                x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(params)
+            ))
+            if cfg.grad_compression:
+                grad_nbytes = int(
+                    compression.wire_bytes_saved(params)["compressed_bytes"])
+        if ckpt_dir is not None:
+            # wrap once so every checkpoint op mirrors onto the store lane
+            ckpt_dir = as_store(ckpt_dir)
+            ckpt_dir.attach_tracer(tracer)
 
     # Explicit compressed dp-reduction (ROADMAP item): when the flag is set
     # and >1 local device is available, replace XLA's implicit all-reduce
@@ -173,7 +205,12 @@ def train(
             f"explicit path {'ON' if use_explicit_dp else 'off' + why_off}")
 
     def apply_burst():
+        nonlocal grad_comm
         expand_s = comm_session.expand(burst_world, provider=burst_provider)
+        if grad_comm is not None:
+            from repro.core.communicator import Communicator
+
+            grad_comm = Communicator(session=comm_session)
         full_s = comm_session.full_rebootstrap_time_s()
         who = f" from {burst_provider}" if burst_provider else ""
         log(f"burst: +{burst_world} workers{who} admitted at step {burst_at} "
@@ -199,13 +236,29 @@ def train(
         if do_burst and step == burst_at:
             apply_burst()
             do_burst = False
+        t_fetch = time.perf_counter()
         batch_data = next(it)
+        fetch_s = time.perf_counter() - t_fetch
+        t_step = time.perf_counter()
         if use_explicit_dp:
             params, opt_state, grad_err, metrics = step_fn(
                 params, opt_state, grad_err, batch_data)
         else:
             params, opt_state, metrics = step_fn(params, opt_state, batch_data)
         losses.append(float(metrics["loss"]))
+        if tracer is not None:
+            tracer.span(0, "overhead", "data_fetch",
+                        duration_s=fetch_s, step=step)
+            tracer.span(0, "compute", "train_step",
+                        duration_s=time.perf_counter() - t_step, step=step)
+            if grad_comm is not None:
+                tracer.span(
+                    0, "comm", "grad_allreduce",
+                    duration_s=grad_comm.collective_time_s(
+                        "allreduce", grad_nbytes),
+                    nbytes=grad_nbytes, step=step,
+                    world=comm_session.world,
+                )
         # `end - 1`, not `steps - 1`: a --stop-after preemption drill must
         # still log the last step it actually executed
         if step % log_every == 0 or step == end - 1:
@@ -218,6 +271,13 @@ def train(
     # stop_after drill never exits with unsaved progress
     if ckpt_dir and end > start and end % ckpt_every != 0:
         ckpt.save(ckpt_dir, end, ckpt_tree())
+    if tracer is not None and tracer.spans:
+        lanes = ", ".join(
+            f"{lane} {tracer.lane_time_s(lane):.3f}s"
+            for lane in ("compute", "comm", "store", "bootstrap", "overhead")
+            if tracer.lane_time_s(lane) > 0.0
+        )
+        log(f"trace: {len(tracer.spans)} spans — {lanes}")
     return params, losses
 
 
@@ -248,15 +308,26 @@ def main():
     ap.add_argument("--burst-provider", default=None,
                     help="provider the burst workers come from (cross-provider "
                          "pairs relay; default: the core fabric's)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the run's modeled span timeline here as raw "
+                         "JSON (convert with scripts/trace_to_chrome.py for "
+                         "chrome://tracing)")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     comm_session = None
-    if args.resume or (args.burst_at is not None and args.burst_world > 0):
+    # --trace-out wants comm spans too, so it also builds the modeled session
+    if args.resume or (args.burst_at is not None and args.burst_world > 0) \
+            or args.trace_out is not None:
         from repro.core.session import CommSession
 
         comm_session = CommSession.bootstrap(args.comm_world, args.comm_fabric)
+    tracer = None
+    if args.trace_out is not None:
+        from repro.core.trace import Tracer
+
+        tracer = Tracer()
     _, losses = train(
         cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
@@ -264,7 +335,16 @@ def main():
         comm_session=comm_session,
         burst_at=args.burst_at, burst_world=args.burst_world,
         burst_provider=args.burst_provider,
+        tracer=tracer,
     )
+    if tracer is not None:
+        import json
+
+        Path(args.trace_out).write_text(json.dumps(tracer.to_json()))
+        cp = tracer.critical_path()
+        lanes = ", ".join(f"{k} {v:.3f}s" for k, v in cp["lanes"].items())
+        print(f"trace written to {args.trace_out}: {len(tracer.spans)} spans; "
+              f"critical rank {cp['rank']} chain {cp['total_s']:.3f}s ({lanes})")
     if losses:
         print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
     else:

@@ -4,8 +4,9 @@ The tier-1 suite must *collect and run* in containers where only pytest +
 jax exist (the CI image installs the real hypothesis from
 requirements-dev.txt; this fallback keeps laptops/sandboxes green).  It
 implements exactly the surface these tests use — ``given``, ``settings``,
-``st.integers``, ``st.lists``, ``st.data`` — by drawing each example from a
-seeded PRNG, so runs are reproducible, just not shrinking/adaptive.
+``st.integers``, ``st.floats``, ``st.tuples``, ``st.lists``, ``st.data`` —
+by drawing each example from a seeded PRNG, so runs are reproducible, just
+not shrinking/adaptive.
 """
 
 from __future__ import annotations
@@ -24,6 +25,14 @@ class _Strategy:
 
 def _integers(min_value: int, max_value: int) -> _Strategy:
     return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s._draw(rng) for s in strategies))
 
 
 def _lists(
@@ -68,7 +77,10 @@ def _data() -> _Strategy:
     return _DATA_SENTINEL
 
 
-st = SimpleNamespace(integers=_integers, lists=_lists, data=_data)
+st = SimpleNamespace(
+    integers=_integers, floats=_floats, tuples=_tuples, lists=_lists,
+    data=_data,
+)
 
 
 def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):

@@ -358,6 +358,76 @@ class TestExpand:
 
 
 # ---------------------------------------------------------------------------
+# Inter-provider relay egress billing (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestEgress:
+    """Relay traffic crossing a provider boundary bills each endpoint's
+    ``egress_usd_per_gb``; intra-provider relays stay free."""
+
+    @staticmethod
+    def _relayed_session():
+        import dataclasses
+
+        fabric = dataclasses.replace(
+            sess.provider_fabric("aws-lambda"),
+            blocked_pairs=frozenset({(0, 1)}),
+        )
+        s = CommSession.bootstrap(4, fabric)
+        assert s.link_map.link(0, 1).relayed
+        return s
+
+    def test_same_provider_world_bills_zero_egress(self):
+        from repro.core import Communicator
+
+        s = self._relayed_session()
+        comm = Communicator(session=s)
+        comm.allreduce([np.zeros(1 << 20, dtype=np.float32)] * 4)
+        # the (0, 1) relay is real, but it never leaves aws-lambda's network
+        assert cm.relay_egress_cost(s) == [0.0] * 4
+
+    def test_cross_provider_relay_bills_both_endpoints(self):
+        from repro.core import Communicator
+
+        s = self._relayed_session()
+        s.rank_providers[1] = "gcp-cloudrun"
+        comm = Communicator(session=s)
+        comm.allreduce([np.zeros(1 << 20, dtype=np.float32)] * 4)
+        per_rank = cm.relay_egress_cost(s)
+        gb = sum(
+            ev.bytes_per_rank for ev in s.events
+            if ev.kind is not CollectiveKind.BOOTSTRAP
+        ) / 1e9
+        aws = netsim.get_provider("aws-lambda").egress_usd_per_gb
+        gcp = netsim.get_provider("gcp-cloudrun").egress_usd_per_gb
+        assert per_rank[0] == pytest.approx(gb * aws)
+        assert per_rank[1] == pytest.approx(gb * gcp)
+        assert per_rank[2:] == [0.0, 0.0]
+        assert 0.0 < per_rank[0] < per_rank[1]  # GCP's premium tier is pricier
+
+    def test_heterogeneous_run_cost_bills_egress_into_per_rank(self):
+        s = CommSession.bootstrap(4, "aws-ec2")
+        rt = BSPRuntime(4, session=s)
+
+        def step(rank, state, comm, world):
+            out = comm.allreduce(
+                [np.zeros(1 << 16, dtype=np.float32)] * world)
+            return (state or 0.0) + float(out[rank][0])
+
+        _, report = rt.run(
+            [("s0", step), ("s1", step)], [0.0] * 4,
+            burst=Burst(at_step=1, new_ranks=4, provider="gcp-cloudrun"),
+        )
+        costs = cm.heterogeneous_run_cost(report, s)
+        # cross-provider pairs relay, so the post-burst allreduce pays egress
+        assert costs["egress_usd"] > 0.0
+        assert costs["egress_usd"] == pytest.approx(
+            sum(cm.relay_egress_cost(s)))
+        assert costs["total_usd"] == pytest.approx(sum(costs["per_rank_usd"]))
+
+
+# ---------------------------------------------------------------------------
 # Pooled ranged-GET pricing (the restore-cliff satellite)
 # ---------------------------------------------------------------------------
 
