@@ -1,0 +1,249 @@
+"""Chaos & recovery: fault domains x worlds under the self-healing fabric.
+
+The paper's §V concedes the Lambda architecture has no tolerance for a
+dropped hole-punched link, a flaky relay store, or a lost worker.  This
+benchmark drives ``BSPRuntime.run`` through every infrastructure fault
+domain (``FaultPlan.link_flaps`` / ``store_outages`` /
+``rendezvous_outages`` / ``rank_losses``) at world {8, 32, 64} on a
+partition-invariant workload, and prices the recovery ladder end to end:
+priced failure detection (DETECT events on the overhead lane), per-link
+re-punch/degrade, outage retry waits, and mid-run shrink with rollback +
+repartition.
+
+Emits ``experiments/BENCH_chaos_recovery.json`` and a sample recovery
+trace (``experiments/trace_chaos_recovery_sample.json``).  CI gates
+(asserted in ``run``):
+
+(a) EVERY faulted scenario completes with results bit-identical to the
+    clean run — the global state concatenation survives flaps, outages,
+    deadline re-invocations, and shrink's rollback + repartition;
+(b) shrink recovery (detect + rollback + incremental shrink) beats the
+    cold re-bootstrap escalation at EVERY world — the membership
+    compaction ≪ re-punching the survivor cascade;
+(c) the exported trace shows the detector: ``detect_*`` spans on the
+    overhead lane ahead of the superstep that recovered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import bsp, faults
+from repro.dist.object_store import S3Store
+
+WORLDS = (8, 32, 64)
+STEPS = 3
+FAULT_STEP = 1      # every scenario fires at superstep 1 entry (of 0..2)
+CHUNK = 64          # per-rank state elements
+
+
+def _step(rank, state, comm, world):
+    if rank == 0:
+        comm.allreduce([np.ones(1 << 12, dtype=np.float64)] * world)
+    return state * 2.0 + 1.0
+
+
+def _init_states(world: int) -> list:
+    flat = np.arange(world * CHUNK, dtype=np.float64)
+    return [flat[r * CHUNK:(r + 1) * CHUNK].copy() for r in range(world)]
+
+
+def _concat(states: list) -> np.ndarray:
+    return np.concatenate([np.atleast_1d(s) for s in states])
+
+
+def _scenarios(world: int) -> dict:
+    """Fault plans per domain; every one fires at superstep ``FAULT_STEP``."""
+    return {
+        "link_flap_transient": dict(
+            plan=faults.FaultPlan(link_flaps=((FAULT_STEP, 0, 1),)),
+        ),
+        "link_flap_permanent": dict(
+            plan=faults.FaultPlan(
+                link_flaps=((FAULT_STEP, 0, 1, "permanent"),)),
+        ),
+        "store_outage": dict(
+            plan=faults.FaultPlan(
+                store_outages=((FAULT_STEP, FAULT_STEP + 1),)),
+            checkpoint=True,
+        ),
+        "rendezvous_outage": dict(
+            # a straggler blows the deadline inside the outage window, so
+            # its re-invocation's re-rendezvous pays the retry ladder
+            plan=faults.FaultPlan(
+                rendezvous_outages=((FAULT_STEP, FAULT_STEP + 1),),
+                straggles=((FAULT_STEP, 0, 30.0),),
+                deadline_s=20.0,
+            ),
+        ),
+        "rank_loss": dict(
+            plan=faults.FaultPlan(rank_losses=((FAULT_STEP, world - 1),)),
+            recovery_policy="shrink",
+            checkpoint=True,
+        ),
+    }
+
+
+def _run(world: int, plan=None, recovery_policy: str = "retry",
+         checkpoint: bool = False):
+    store = S3Store() if checkpoint else None
+    rt = bsp.BSPRuntime(world, provider="aws-lambda", checkpoint_dir=store)
+    steps = [(f"step{i}", _step) for i in range(STEPS)]
+    states, report = rt.run(
+        steps, _init_states(world), faults=plan,
+        recovery_policy=recovery_policy,
+    )
+    return states, report, rt
+
+
+def _scenario_point(name: str, world: int, spec: dict,
+                    clean: np.ndarray) -> tuple[dict, "bsp.BSPRuntime"]:
+    states, report, rt = _run(
+        world, plan=spec["plan"],
+        recovery_policy=spec.get("recovery_policy", "retry"),
+        checkpoint=spec.get("checkpoint", False),
+    )
+    identical = bool(np.array_equal(_concat(states), clean))
+    assert identical, (
+        f"{name}@{world}: faulted run diverged from the clean run"
+    )
+    sess = rt.session
+    point = {
+        "scenario": name,
+        "world": world,
+        "final_world": report.world,
+        "total_s": report.total_s,
+        "identical": identical,
+        "recovery_s": sum(s.recovery_s for s in report.supersteps),
+        "shrink_s": sum(s.shrink_s for s in report.supersteps),
+        "rollback_s": sum(s.rollback_s for s in report.supersteps),
+        "detect_s": sess.detect_time_s,
+        "evicted": len(report.evicted),
+    }
+    # per-domain structural gates: the domain actually fired AND was priced
+    algos = [ev.algo for ev in sess.events]
+    if name == "link_flap_transient":
+        assert any(a.startswith("repunch_l0_1") for a in algos), algos
+        assert not sess.link_map.is_relayed(0, 1)
+    elif name == "link_flap_permanent":
+        assert any(a.startswith("degrade_l0_1") for a in algos), algos
+        assert sess.link_map.is_relayed(0, 1)
+    elif name == "store_outage":
+        ops = rt.checkpoint_store.ops
+        assert any(op.kind == "outage" for op in ops), (
+            "store outage window never priced a checkpoint op")
+    elif name == "rendezvous_outage":
+        assert "outage_wait_rendezvous" in algos, algos
+        assert any(s.rebootstrap_s > 0.0 for s in report.supersteps)
+    elif name == "rank_loss":
+        assert report.world == world - 1 and len(report.evicted) == 1
+        assert point["detect_s"] > 0.0 and point["shrink_s"] > 0.0
+    return point, rt
+
+
+def _shrink_vs_cold(world: int) -> dict:
+    """Gate (b): incremental shrink recovery beats the cold re-bootstrap."""
+    plan = faults.FaultPlan(rank_losses=((FAULT_STEP, world - 1),))
+    _, rep_inc, rt_inc = _run(world, plan=plan, recovery_policy="shrink",
+                              checkpoint=True)
+    _, rep_cold, rt_cold = _run(world, plan=plan,
+                                recovery_policy="rebootstrap",
+                                checkpoint=True)
+    inc = sum(s.recovery_s + s.shrink_s + s.rollback_s
+              for s in rep_inc.supersteps)
+    cold = sum(s.recovery_s + s.shrink_s + s.rollback_s
+               for s in rep_cold.supersteps)
+    assert inc < cold, (
+        f"world {world}: incremental shrink recovery {inc:.3f}s not cheaper "
+        f"than cold re-bootstrap {cold:.3f}s"
+    )
+    assert rep_inc.total_s < rep_cold.total_s, (world, rep_inc.total_s,
+                                                rep_cold.total_s)
+    return {
+        "world": world,
+        "incremental_recovery_s": inc,
+        "cold_recovery_s": cold,
+        "speedup": cold / max(inc, 1e-12),
+        "incremental_shrink_s": rt_inc.session.shrink_time_s,
+        "cold_shrink_s": rt_cold.session.shrink_time_s,
+    }
+
+
+def _export_trace(trace_out: str | Path | None) -> dict:
+    """Gate (c): the recovery ladder is visible on the exported timeline."""
+    spec = _scenarios(8)["rank_loss"]
+    _, report, rt = _run(8, plan=spec["plan"], recovery_policy="shrink",
+                         checkpoint=True)
+    tr = rt.tracer
+    detect = [s for s in tr.spans
+              if s.lane == "overhead" and s.kind.startswith("detect")]
+    shrink = [s for s in tr.spans
+              if s.lane == "bootstrap" and s.kind.startswith("shrink")]
+    assert detect, "no detect_* spans on the overhead lane"
+    assert shrink, "no shrink_* spans on the bootstrap lane"
+    if trace_out is not None:
+        out = Path(trace_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(tr.to_json()))
+    cp = tr.critical_path()
+    return {
+        "trace_spans": len(tr.spans),
+        "detect_spans": len(detect),
+        "shrink_spans": len(shrink),
+        "critical_path_lanes": cp["lanes"],
+    }
+
+
+def run(trace_out: str | Path | None = None) -> dict:
+    points = []
+    shrink_rows = []
+    for world in WORLDS:
+        clean_states, clean_report, _ = _run(world)
+        clean = _concat(clean_states)
+        for name, spec in _scenarios(world).items():
+            point, _rt = _scenario_point(name, world, spec, clean)
+            point["clean_total_s"] = clean_report.total_s
+            points.append(point)
+        shrink_rows.append(_shrink_vs_cold(world))
+    return {
+        "worlds": list(WORLDS),
+        "scenarios": points,
+        "shrink_vs_cold": shrink_rows,
+        "trace": _export_trace(trace_out),
+    }
+
+
+def write_report(out: str | Path, trace_out: str | Path | None = None) -> dict:
+    res = run(trace_out)  # the run itself asserts every gate
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main(report=print) -> None:
+    res = run()
+    for p in res["scenarios"]:
+        report(f"chaos_recovery/{p['scenario']}_w{p['world']}_recovery_s,,"
+               f"{p['recovery_s'] + p['shrink_s'] + p['rollback_s']:.3f}")
+    for r in res["shrink_vs_cold"]:
+        report(f"chaos_recovery/shrink_vs_cold_w{r['world']}_speedup,,"
+               f"{r['speedup']:.2f}")
+    t = res["trace"]
+    report(f"chaos_recovery/detect_spans,,{t['detect_spans']}")
+    report(f"chaos_recovery/shrink_spans,,{t['shrink_spans']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/BENCH_chaos_recovery.json")
+    ap.add_argument("--trace-out",
+                    default="experiments/trace_chaos_recovery_sample.json")
+    args = ap.parse_args()
+    res = write_report(args.out, trace_out=args.trace_out)
+    print(json.dumps({k: res[k] for k in ("shrink_vs_cold", "trace")},
+                     indent=1))

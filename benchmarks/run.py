@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   provider_placement deadline-vs-$ placement Pareto + burst expand vs re-bootstrap
   jobs_stragglers    jobs-layer speculation vs no-mitigation under stragglers
   overlap            comm/compute overlap pricing (double-buffered supersteps)
+  chaos_recovery     fault domains x worlds: detect/repunch/degrade/shrink
 """
 
 from __future__ import annotations
@@ -26,6 +27,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        chaos_recovery,
         ckpt_store,
         collective_algos,
         collectives_micro,
@@ -57,6 +59,7 @@ def main() -> None:
         ("provider_placement", provider_placement),
         ("jobs_stragglers", jobs_stragglers),
         ("overlap", overlap),
+        ("chaos_recovery", chaos_recovery),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

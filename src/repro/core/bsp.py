@@ -63,6 +63,11 @@ class SuperstepReport:
     barrier_s: float
     rebootstrap_s: float = 0.0  # deadline-killed ranks re-joining the session
     expand_s: float = 0.0       # burst admission before this superstep ran
+    # self-healing fabric (run(recovery_policy=...)): what the degradation
+    # ladder spent before this superstep's compute ran
+    recovery_s: float = 0.0     # detect + re-punch/degrade + outage waits
+    shrink_s: float = 0.0       # membership compaction (shrink_* events)
+    rollback_s: float = 0.0     # re-reading the last checkpoint after a loss
     # overlap scheduling (run(overlap=True)): the double-buffered pipeline's
     # modeled compute+comm time, replacing the compute_s + comm_s sum in
     # total_s; ``chunks`` is the chunk count the pipeline chose.  None means
@@ -77,7 +82,8 @@ class SuperstepReport:
             if self.overlapped_s is None else self.overlapped_s
         )
         return (phase + self.barrier_s
-                + self.rebootstrap_s + self.expand_s)
+                + self.rebootstrap_s + self.expand_s
+                + self.recovery_s + self.shrink_s + self.rollback_s)
 
     @property
     def overlap_speedup(self) -> float:
@@ -95,6 +101,10 @@ class RunReport:
     # rank -> superstep index at which it joined (absent == rank 0's cohort);
     # the heterogeneous cost model bills each rank from its join point
     joined_at: dict = dataclasses.field(default_factory=dict)
+    # ranks evicted by a mid-run shrink: {"rank", "step", "provider"} under
+    # their PRE-shrink labels — the cost model bills each only up to its
+    # eviction step (report.world is the surviving world)
+    evicted: list = dataclasses.field(default_factory=list)
 
     @property
     def total_s(self) -> float:
@@ -283,6 +293,101 @@ class BSPRuntime:
                 states = list(states) + [None] * int(new_ranks)
         return states, expand_s
 
+    def _rollback(self, idx: int, states: list[Any]) -> tuple[list[Any], float]:
+        """Restore the newest committed checkpoint before superstep ``idx``
+        (priced store GETs).  With no checkpoint store the in-memory states
+        stand in for free — the simulation driver holds survivor state."""
+        if self.checkpoint_store is None:
+            return list(states), 0.0
+        for step in range(idx - 1, -1, -1):
+            group = self._group_name(step)
+            if self.checkpoint_store.committed(group):
+                n0 = len(self.checkpoint_store.ops)
+                ckpt = pickle.loads(
+                    self.checkpoint_store.get_object(group, "states.pkl"))
+                t = float(sum(
+                    op.time_s for op in self.checkpoint_store.ops[n0:]))
+                return list(ckpt["states"]), t
+        return list(states), 0.0
+
+    # -- self-healing ---------------------------------------------------------
+
+    def _recover(
+        self,
+        idx: int,
+        states: list[Any],
+        armed: _faults.ArmedFaults,
+        recovery_policy: str,
+        repartition: Callable[[list[Any], int], list[Any]] | None,
+        joined_at: dict,
+        evicted: list,
+    ) -> tuple[list[Any], float, float, float, list]:
+        """Run this superstep's infrastructure-fault recovery at entry.
+
+        Arms the session/store fault clocks, walks the per-link degradation
+        ladder for every flap, and escalates permanent rank losses per the
+        policy.  Returns ``(states, recovery_s, shrink_s, rollback_s,
+        recovery_events)`` — the events slice is what fired here, for the
+        tracer to lay ahead of compute.
+        """
+        session = self.session
+        session.arm_faults(armed, idx)
+        if self.checkpoint_store is not None:
+            self.checkpoint_store.arm_faults(armed, idx)
+        n0 = len(session.events)
+        recovery_s = shrink_s = rollback_s = 0.0
+
+        degraded = False
+        for a, b, permanent in armed.link_flaps_at(idx, self.world):
+            t, action = session.recover_link(a, b, permanent=permanent)
+            recovery_s += t
+            degraded = degraded or action == "degraded"
+        if degraded:
+            self.comm.refresh_links()
+
+        losses = [r for r in range(self.world) if armed.rank_loss(idx, r)]
+        if losses:
+            if recovery_policy == "retry":
+                # fold each loss back into the attempt loop as one more kill
+                for r in losses:
+                    armed.requeue_kill(idx, r)
+            else:
+                label = "_".join(f"r{r}" for r in losses)
+                recovery_s += session.detect_failure(label)
+                states, rollback_s = self._rollback(idx, states)
+                for r in losses:
+                    evicted.append({
+                        "rank": r, "step": idx,
+                        "provider": session.rank_providers[r],
+                    })
+                policy = ("cold" if recovery_policy == "rebootstrap"
+                          else "incremental")
+                shrink_s = session.shrink(losses, policy=policy)
+                self.world = session.world
+                self.comm = Communicator(
+                    channel=self.comm.channel, algorithm=self.algorithm,
+                    session=session,
+                )
+                # survivors relabel to 0..S-1: keep join records addressable
+                dead = set(losses)
+                survivors = [r for r in range(self.world + len(losses))
+                             if r not in dead]
+                remap = {old: new for new, old in enumerate(survivors)}
+                for old in list(joined_at):
+                    step = joined_at.pop(old)
+                    if old in remap:
+                        joined_at[remap[old]] = step
+                repart = repartition
+                if repart is None:
+                    from repro.dist.sharding import repartition_states
+                    repart = repartition_states
+                states = repart(list(states), self.world)
+                if len(states) != self.world:
+                    raise ValueError(
+                        "repartition returned wrong number of states")
+        return (states, recovery_s, shrink_s, rollback_s,
+                list(session.events[n0:]))
+
     # -- span timeline --------------------------------------------------------
 
     def _trace_superstep(
@@ -298,21 +403,31 @@ class BSPRuntime:
         chunks: int,
         lat_s: float,
         bw_s: float,
+        recovery_events: list | None = None,
     ) -> None:
         """Schedule one superstep's spans on the modeled timeline.
 
-        overlap=False order: expand -> per-rank compute -> rebootstrap ->
-        each comm event sequentially -> barrier, so the superstep window
-        equals ``SuperstepReport.total_s``.  overlap=True emits the chunked
-        double-buffer pipeline: rank r's compute is split into ``chunks``
-        equal spans; comm chunk i (bandwidth share bw/k) starts once chunk i
-        has been computed everywhere and the previous comm chunk drained; the
-        latency rounds of the final chunk are the unhideable tail.
+        overlap=False order: recovery ladder (detect spans on the overhead
+        lane, repunch/degrade/shrink on bootstrap) -> expand -> per-rank
+        compute -> rebootstrap -> each comm event sequentially -> barrier,
+        so the superstep window equals ``SuperstepReport.total_s``.
+        overlap=True emits the chunked double-buffer pipeline: rank r's
+        compute is split into ``chunks`` equal spans; comm chunk i
+        (bandwidth share bw/k) starts once chunk i has been computed
+        everywhere and the previous comm chunk drained; the latency rounds
+        of the final chunk are the unhideable tail.
         """
         tr = self.tracer
         ranks = range(self.world)
         compute_s = max(rank_elapsed, default=0.0)
         t0 = tr.end_s
+        for ev in recovery_events or ():
+            lane = ("overhead" if ev.kind is CollectiveKind.DETECT
+                    else "bootstrap")
+            for r in ranks:
+                tr.span(r, lane, ev.algo, t0=t0,
+                        duration_s=ev.time_s, step=idx)
+            t0 += ev.time_s
         if expand_s > 0.0:
             for r in ranks:
                 tr.span(r, "bootstrap", "expand", t0=t0,
@@ -387,6 +502,8 @@ class BSPRuntime:
         faults: _faults.FaultPlan | None = None,
         overlap: bool = False,
         overlap_chunks: int | None = None,
+        recovery_policy: str = "retry",
+        repartition: Callable[[list[Any], int], list[Any]] | None = None,
     ) -> tuple[list[Any], RunReport]:
         """Execute `supersteps` over per-rank `init_states`.
 
@@ -410,6 +527,25 @@ class BSPRuntime:
         ``overlap_chunks``).  ``overlap=False`` (default) reproduces the
         strict compute-then-communicate totals bit-exactly.  Either way every
         superstep is scheduled on ``self.tracer``'s modeled timeline.
+
+        Self-healing (the plan's infrastructure domains): at each superstep
+        entry, scheduled/rate link flaps run the per-link recovery ladder
+        (detect -> re-punch -> degrade to relay) and ``rank_losses`` escalate
+        per ``recovery_policy``:
+
+        - ``"retry"`` (default) — treat the loss as one more kill: the rank
+          is re-invoked by the attempt loop (pre-existing behavior);
+        - ``"shrink"`` — detect the dead ranks, roll back to the last store
+          checkpoint, compact the world through the priced incremental
+          :meth:`CommSession.shrink`, repartition the checkpointed states
+          over the survivors (``repartition=``, default
+          :func:`repro.dist.sharding.repartition_states`), and continue;
+        - ``"rebootstrap"`` — same escalation, but the membership change is
+          priced as a cold re-bootstrap of the survivor world (the baseline
+          shrink beats).
+
+        Store/rendezvous outage windows price into relayed collectives,
+        checkpoint ops, and any re-join that lands inside them.
         """
         if faults is not None and (
             fail_injector is not None or straggle_injector is not None
@@ -422,6 +558,11 @@ class BSPRuntime:
         )
         armed = plan.armed()
         deadline_s = plan.deadline_s if plan.deadline_s is not None else self.deadline_s
+        if recovery_policy not in ("retry", "shrink", "rebootstrap"):
+            raise ValueError(
+                f"unknown recovery_policy {recovery_policy!r}; "
+                f"options: retry, shrink, rebootstrap"
+            )
         if len(init_states) != self.world:
             raise ValueError("need one init state per rank")
 
@@ -438,6 +579,7 @@ class BSPRuntime:
         init_s = self.session.bootstrap_time_s
         reports: list[SuperstepReport] = []
         joined_at: dict = {}
+        evicted: list = []
 
         for idx in range(start_step, len(supersteps)):
             name, fn = supersteps[idx]
@@ -451,6 +593,13 @@ class BSPRuntime:
                 for r in range(old_world, self.world):
                     joined_at[r] = idx
             self.comm.reset_events()
+            recovery_s = shrink_s = rollback_s = 0.0
+            recovery_events: list = []
+            if plan.any_infra_faults:
+                states, recovery_s, shrink_s, rollback_s, recovery_events = (
+                    self._recover(idx, states, armed, recovery_policy,
+                                  repartition, joined_at, evicted)
+                )
             max_rank_s = 0.0
             rank_elapsed: list[float] = [0.0] * self.world
             retries = 0
@@ -502,7 +651,8 @@ class BSPRuntime:
             # step's and kept only BOOTSTRAP entries (init/reboot/expand)
             step_events = [
                 ev for ev in self.session.events
-                if ev.kind is not CollectiveKind.BOOTSTRAP
+                if ev.kind not in
+                (CollectiveKind.BOOTSTRAP, CollectiveKind.DETECT)
             ]
             overlapped_s = None
             chunks = 1
@@ -522,17 +672,21 @@ class BSPRuntime:
                 SuperstepReport(
                     idx, name, max_rank_s, comm_s, retries, barrier_s,
                     rebootstrap_s=reboot_s, expand_s=expand_s,
+                    recovery_s=recovery_s, shrink_s=shrink_s,
+                    rollback_s=rollback_s,
                     overlapped_s=overlapped_s, chunks=chunks,
                 )
             )
             self._trace_superstep(
                 idx, name, rank_elapsed, step_events, expand_s, reboot_s,
                 barrier_s, overlapped_s, chunks, lat_s, bw_s,
+                recovery_events=recovery_events,
             )
             self._save(idx, states)
             self._completed_steps = idx + 1
 
-        return states, RunReport(init_s, reports, self.world, joined_at=joined_at)
+        return states, RunReport(
+            init_s, reports, self.world, joined_at=joined_at, evicted=evicted)
 
 
 def resize_checkpoint(

@@ -104,6 +104,20 @@ the table above applies unchanged.  When some pairs could not be punched
                     split along the provider boundary prices all-direct on
                     its own channel and only boundary-crossing groups pay
                     the relay.
+    degraded        a direct pair whose punched channel flapped permanently
+    (mid-run flap)  was moved to its relay fallback by the recovery ladder
+                    (``CommSession.recover_link`` -> ``LinkMap.degrade``);
+                    after ``refresh_links()`` the pair prices exactly like
+                    a bootstrap-time relay fallback — same data lands (bit-
+                    identical results), only the modeled time grows.  The
+                    degradation itself is a priced ``degrade_l{a}_{b}``
+                    BOOTSTRAP event; detection is priced as ``DETECT``
+                    events on the overhead lane.
+    store outage    while a ``FaultPlan.store_outages`` window is active,
+    (fault domain)  every relay/staged collective pays the outage retry
+                    ladder (``outage_penalty_s``) on top of its price —
+                    the event's algo gains an ``+outage`` suffix;
+                    all-direct collectives are unaffected.
 
 ``CommEvent.relay`` records the relay channel(s) and
 ``CommEvent.relayed_pairs`` the failed-pair count, so hybrid rounds stay
@@ -139,6 +153,7 @@ class CollectiveKind(str, enum.Enum):
     SCATTER = "scatter"
     P2P = "p2p"
     BOOTSTRAP = "bootstrap"  # session lifecycle: rendezvous / punch / relay
+    DETECT = "detect"        # failure detector: suspect / confirm probes
 
 
 @dataclasses.dataclass
@@ -360,6 +375,14 @@ class Communicator:
         algo_name, t, relay_name = self._price(
             kind, bytes_per_rank, algorithm, peer=peer
         )
+        # store-outage fault domain: store-mediated traffic (relayed pairs,
+        # or a fully staged channel) pays the retry ladder while the window
+        # is active; all-direct collectives never touch the store
+        if relay_name is not None or self.channel.staged:
+            outage_s = self.session.store_outage_penalty_s()
+            if outage_s > 0.0:
+                t += outage_s
+                algo_name += "+outage"
         ev = CommEvent(
             kind, self.world_size, int(bytes_per_rank), t,
             raw_bytes=None if raw_bytes is None else int(raw_bytes),
@@ -386,9 +409,15 @@ class Communicator:
         re-priced (unknown or composite names) degrade to pure latency —
         the conservative choice, since latency is what overlap can't hide.
         """
-        if ev.kind is CollectiveKind.BOOTSTRAP or ev.time_s <= 0.0:
+        if ev.kind is CollectiveKind.BOOTSTRAP \
+                or ev.kind is CollectiveKind.DETECT or ev.time_s <= 0.0:
             return ev.time_s, 0.0
+        # an outage-penalized event re-prices at its base schedule; the
+        # penalty lands in the bandwidth remainder (it can't be pipelined
+        # away any less than payload bytes can)
         algo = ev.algo
+        if algo.endswith("+outage"):
+            algo = algo[: -len("+outage")]
         try:
             if algo == "fixed":
                 lat = netsim.collective_time(self.channel, ev.kind.value, ev.world, 0)
@@ -420,11 +449,21 @@ class Communicator:
 
     @property
     def comm_time_s(self) -> float:
-        """Priced collective time (bootstrap events are accounted separately
-        via ``session.bootstrap_time_s``)."""
+        """Priced collective time (bootstrap and failure-detector events are
+        accounted separately via ``session.bootstrap_time_s`` /
+        ``session.recovery_time_s``)."""
         return float(sum(
-            e.time_s for e in self.events if e.kind != CollectiveKind.BOOTSTRAP
+            e.time_s for e in self.events
+            if e.kind not in (CollectiveKind.BOOTSTRAP, CollectiveKind.DETECT)
         ))
+
+    def refresh_links(self) -> None:
+        """Re-derive this group's link view from the session's live
+        ``LinkMap`` — call after the recovery ladder degraded a pair
+        (``LinkMap.degrade``) so subsequent collectives price the relayed
+        topology.  Sub-communicators from :meth:`split` refresh
+        independently."""
+        self._links = self.session.link_map.group_links(self.group)
 
     @property
     def bytes_on_wire(self) -> int:

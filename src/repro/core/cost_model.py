@@ -227,8 +227,11 @@ def heterogeneous_run_cost(
     pre-registry fabrics).  Relay traffic between ranks on *different*
     providers additionally bills each endpoint's
     ``egress_usd_per_gb`` (:func:`relay_egress_cost`) into its per-rank
-    total.  Returns ``{"total_usd", "per_rank_usd", "per_provider_usd",
-    "egress_usd"}`` with ``total_usd == sum(per_rank_usd)``.
+    total.  Ranks evicted by a mid-run shrink (``report.evicted``) are
+    billed only up to their eviction step — from that superstep on, the
+    survivors alone pay.  Returns ``{"total_usd", "per_rank_usd",
+    "per_provider_usd", "egress_usd", "evicted_usd"}`` with
+    ``total_usd == sum(per_rank_usd) + evicted_usd``.
     """
     from repro.core import netsim
 
@@ -251,11 +254,22 @@ def heterogeneous_run_cost(
             cost += egress[rank]
         per_rank.append(cost)
         per_provider[prov.name] = per_provider.get(prov.name, 0.0) + cost
+    # evicted ranks (pre-shrink labels): billed init + every superstep
+    # strictly before their eviction step, at their own provider's rates
+    evicted_usd = 0.0
+    for e in getattr(report, "evicted", ()) or ():
+        prov = netsim.get_provider(e.get("provider") or default_provider)
+        wall = report.init_s + sum(
+            t for i, t in step_total.items() if i < int(e["step"]))
+        cost = prov.invocation_cost(mem_gb, wall)
+        evicted_usd += cost
+        per_provider[prov.name] = per_provider.get(prov.name, 0.0) + cost
     return {
-        "total_usd": sum(per_rank),
+        "total_usd": sum(per_rank) + evicted_usd,
         "per_rank_usd": per_rank,
         "per_provider_usd": per_provider,
         "egress_usd": sum(egress),
+        "evicted_usd": evicted_usd,
     }
 
 

@@ -83,6 +83,31 @@ class RendezvousServer:
             raise ValueError("extra must be >= 1")
         self.expected_world += int(extra)
 
+    def shrink(self, dead_ranks) -> dict:
+        """Compact the membership table after evicting ``dead_ranks``.
+
+        Survivors are relabeled to 0..S-1 in rank order (their NAT mappings
+        move to the new slots), the atomic counter and expected world drop
+        to the survivor count, and held locks are released (the rank-ordered
+        locking protocol restarts over the new labels).  This is NOT the
+        §III-D stale-metadata hazard: the coordinator rewrites the live
+        namespace in one atomic batch, it does not reuse a dead one.
+        Returns the old->new rank map.
+        """
+        dead = {int(r) for r in dead_ranks}
+        for r in dead:
+            if r not in self._nat_table:
+                raise KeyError(f"rank {r} was never assigned; cannot evict")
+        survivors = [r for r in sorted(self._nat_table) if r not in dead]
+        if not survivors:
+            raise ValueError("cannot shrink away the whole membership")
+        remap = {old: new for new, old in enumerate(survivors)}
+        self._nat_table = {remap[r]: self._nat_table[r] for r in survivors}
+        self._counter = len(survivors)
+        self.expected_world = len(survivors)
+        self._locks_held.clear()
+        return remap
+
     def reassign_rank(self, rank: int, internal_addr: str) -> str:
         """Re-register a re-invoked worker in its existing slot.
 

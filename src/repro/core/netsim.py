@@ -136,6 +136,34 @@ RIVANNA_6GB = PlatformModel(
     init_per_level_s=0.05, init_base_s=0.3, sched_jitter_s=0.28,
 )
 
+
+@dataclasses.dataclass(frozen=True)
+class DetectorModel:
+    """Heartbeat/timeout failure detector on the modeled clock.
+
+    A peer is *suspected* after ``suspect_missed`` heartbeat periods pass
+    without an ack, then *confirmed* dead by ``confirm_probes`` direct probes
+    that each time out after ``probe_timeout_s``.  Both phases are priced as
+    ``DETECT`` events on the session's ``overhead`` lane so
+    ``Tracer.critical_path()`` shows detection latency inside recovery time.
+    """
+
+    heartbeat_period_s: float = 0.5
+    suspect_missed: int = 3        # missed heartbeats before suspicion
+    confirm_probes: int = 2        # direct probes confirming the suspicion
+    probe_timeout_s: float = 1.0   # each confirm probe's timeout
+
+    def suspect_s(self) -> float:
+        """Seconds from failure to suspicion (missed-heartbeat window)."""
+        return self.heartbeat_period_s * self.suspect_missed
+
+    def confirm_s(self) -> float:
+        """Seconds from suspicion to confirmation (probe timeouts)."""
+        return self.probe_timeout_s * self.confirm_probes
+
+
+DEFAULT_DETECTOR = DetectorModel()
+
 # ---------------------------------------------------------------------------
 # Provider fabric registry
 # ---------------------------------------------------------------------------

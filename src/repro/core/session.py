@@ -204,6 +204,51 @@ class LinkMap:
     def override_pairs(self) -> tuple:
         return tuple(sorted(self._overrides))
 
+    def degrade(self, a: int, b: int,
+                channel: netsim.ChannelModel | None = None) -> Link:
+        """Demote a direct pair to its relay fallback (the recovery ladder's
+        last rung before shrink: the punched channel is gone for good, the
+        pair's traffic routes through the store from now on).  Idempotent on
+        an already-relayed pair.  Returns the pair's new :class:`Link`."""
+        a, b = sorted((int(a), int(b)))
+        if a == b or not (0 <= a and b < self.world):
+            raise ValueError(f"pair ({a}, {b}) invalid for world {self.world}")
+        self._overrides.pop((a, b), None)
+        self._relays[(a, b)] = channel or self.fallback
+        return self.link(a, b)
+
+    def restore_direct(self, a: int, b: int,
+                       channel: netsim.ChannelModel | None = None) -> Link:
+        """Promote a relayed pair back to a direct channel (a successful
+        re-punch after a transient flap).  ``channel`` other than the base
+        direct lands as a per-pair override."""
+        a, b = sorted((int(a), int(b)))
+        self._relays.pop((a, b), None)
+        if channel is not None and channel != self.direct:
+            self._overrides[(a, b)] = channel
+        return self.link(a, b)
+
+    def compact(self, dead_ranks: Iterable[int]) -> dict:
+        """Drop ``dead_ranks`` and relabel the survivors 0..S-1 in place
+        (the link-table half of :meth:`CommSession.shrink`).  Pairs touching
+        a dead rank disappear; surviving relays/overrides keep their
+        channels under the new labels.  Returns the old->new rank map."""
+        dead = {int(r) for r in dead_ranks}
+        survivors = [r for r in range(self.world) if r not in dead]
+        remap = {old: new for new, old in enumerate(survivors)}
+
+        def _compact(table: dict) -> dict:
+            out = {}
+            for (a, b), ch in table.items():
+                if a in remap and b in remap:
+                    out[tuple(sorted((remap[a], remap[b])))] = ch
+            return out
+
+        self._relays = _compact(self._relays)
+        self._overrides = _compact(self._overrides)
+        self.world = len(survivors)
+        return remap
+
     def group_links(self, group: tuple) -> algorithms.GroupLinks:
         """Link view for a sub-group, relabeled to local ranks.
 
@@ -262,9 +307,18 @@ class CommSession:
         self.trace_ranks: tuple[int, ...] | None = None
         self._mirror = True
         # per-rank provider names (None for pre-registry fabrics); expand()
-        # appends to this as it grows the world
+        # appends to this as it grows the world, shrink() compacts it
         base = fabric.provider if fabric is not None else None
         self.rank_providers: list[str | None] = [base] * self.world
+        # failure detector pricing (suspect/confirm DETECT events)
+        self.detector = netsim.DEFAULT_DETECTOR
+        # ranks evicted by shrink(): {"rank", "provider"} in eviction order
+        self.evicted: list[dict] = []
+        # armed fault-domain context (ArmedFaults + current step); the
+        # runtime arms it per superstep so outage windows hit rendezvous
+        # registrations and relayed collectives on the modeled clock
+        self._armed = None
+        self._fault_step = 0
 
     # -- construction ---------------------------------------------------------
 
@@ -386,15 +440,22 @@ class CommSession:
     def direct_channel(self) -> netsim.ChannelModel:
         return self.link_map.direct
 
+    # lifecycle-event algo prefixes that are NOT part of the initial
+    # bootstrap: re-joins, elastic resizes, and the recovery ladder
+    _LATER_LIFECYCLE = (
+        "rebootstrap", "expand", "shrink", "repunch", "degrade", "outage_wait",
+    )
+
     @property
     def bootstrap_time_s(self) -> float:
-        """Priced initial bootstrap (excludes re-bootstraps and expands)."""
+        """Priced initial bootstrap (excludes re-bootstraps, expands,
+        shrinks, and recovery-ladder events)."""
         from repro.core.communicator import CollectiveKind
 
         return float(sum(
             e.time_s for e in self.events
             if e.kind == CollectiveKind.BOOTSTRAP
-            and not e.algo.startswith(("rebootstrap", "expand"))
+            and not e.algo.startswith(self._LATER_LIFECYCLE)
         ))
 
     @property
@@ -418,14 +479,51 @@ class CommSession:
             and e.algo.startswith("expand")
         ))
 
+    @property
+    def shrink_time_s(self) -> float:
+        """Sum of every priced ``shrink_*`` event (all shrinks so far)."""
+        from repro.core.communicator import CollectiveKind
+
+        return float(sum(
+            e.time_s for e in self.events
+            if e.kind == CollectiveKind.BOOTSTRAP
+            and e.algo.startswith("shrink")
+        ))
+
+    @property
+    def detect_time_s(self) -> float:
+        """Sum of every failure-detector (``DETECT``) event."""
+        from repro.core.communicator import CollectiveKind
+
+        return float(sum(
+            e.time_s for e in self.events if e.kind == CollectiveKind.DETECT
+        ))
+
+    @property
+    def recovery_time_s(self) -> float:
+        """Everything the degradation ladder spent: detector probes plus
+        re-punches, relay degradations, and outage retry waits (shrink and
+        rebootstrap are accounted by their own properties)."""
+        from repro.core.communicator import CollectiveKind
+
+        t = self.detect_time_s
+        t += float(sum(
+            e.time_s for e in self.events
+            if e.kind == CollectiveKind.BOOTSTRAP
+            and e.algo.startswith(("repunch", "degrade", "outage_wait"))
+        ))
+        return t
+
     def reset_events(self, keep_bootstrap: bool = True) -> None:
-        """Clear collective events; bootstrap history survives by default.
-        In-place so every communicator aliasing this log stays wired."""
+        """Clear collective events; bootstrap/lifecycle history (including
+        failure-detector events) survives by default.  In-place so every
+        communicator aliasing this log stays wired."""
         from repro.core.communicator import CollectiveKind
 
         kept = [
             e for e in self.events
-            if keep_bootstrap and e.kind == CollectiveKind.BOOTSTRAP
+            if keep_bootstrap
+            and e.kind in (CollectiveKind.BOOTSTRAP, CollectiveKind.DETECT)
         ]
         self.events[:] = kept
 
@@ -485,6 +583,236 @@ class CommSession:
 
         return Communicator(session=self, algorithm=algorithm)
 
+    # -- fault domains & recovery ladder --------------------------------------
+
+    def arm_faults(self, armed, step: int = 0) -> None:
+        """Attach one run's :class:`~repro.core.faults.ArmedFaults` so
+        infrastructure domains (store/rendezvous outages) price into this
+        session's lifecycle ops.  ``step`` seeds the fault clock; the
+        runtime advances it via :meth:`set_fault_step` each superstep."""
+        self._armed = armed
+        self._fault_step = int(step)
+
+    def set_fault_step(self, step: int) -> None:
+        self._fault_step = int(step)
+
+    def store_outage_penalty_s(self) -> float:
+        """Retry-ladder seconds store-mediated traffic pays right now
+        (0.0 when no faults are armed or the store is healthy).  Consulted
+        by the communicator for relayed/staged collectives."""
+        if self._armed is None:
+            return 0.0
+        return self._armed.outage_penalty_s("store", self._fault_step)
+
+    def _rendezvous_outage_wait(self) -> float:
+        """If the rendezvous server is down right now, pay (and log) the
+        retry ladder before the registration lands.  Returns the wait."""
+        if self._armed is None:
+            return 0.0
+        wait = self._armed.outage_penalty_s("rendezvous", self._fault_step)
+        if wait > 0.0:
+            from repro.core.communicator import CollectiveKind, CommEvent
+
+            self.log_event(CommEvent(
+                CollectiveKind.BOOTSTRAP, self.world, 0, wait,
+                algo="outage_wait_rendezvous",
+            ))
+        return wait
+
+    def detect_failure(self, label: str) -> float:
+        """Run the priced failure detector against one target (a rank or a
+        link): the missed-heartbeat suspicion window, then the confirm
+        probes — two ``DETECT`` events (``detect_suspect_<label>``,
+        ``detect_confirm_<label>``) on the overhead lane.  Returns the
+        summed modeled seconds (failure to confirmed-dead)."""
+        from repro.core.communicator import CollectiveKind, CommEvent
+
+        suspect = self.detector.suspect_s()
+        confirm = self.detector.confirm_s()
+        self.log_event(CommEvent(
+            CollectiveKind.DETECT, self.world, 0, suspect,
+            algo=f"detect_suspect_{label}",
+        ))
+        self.log_event(CommEvent(
+            CollectiveKind.DETECT, self.world, 0, confirm,
+            algo=f"detect_confirm_{label}",
+        ))
+        return suspect + confirm
+
+    def recover_link(self, a: int, b: int,
+                     permanent: bool = False) -> tuple:
+        """The per-link degradation ladder for a flapped direct pair.
+
+        detect (suspect -> confirm) -> re-punch with exponential backoff ->
+        if the link is gone for good, degrade to the relay fallback
+        (``LinkMap.degrade``).  A transient flap costs one failed punch, a
+        backoff, and one successful re-punch; a permanent one burns the
+        fabric's ``max_retries`` punch attempts before falling back to the
+        store.  Every rung is a priced event; the caller refreshes its
+        communicators afterwards (:meth:`Communicator.refresh_links`).
+
+        Returns ``(modeled_seconds, action)`` with action ``"repunched"``,
+        ``"degraded"``, or ``"already_relayed"``.
+        """
+        from repro.core.communicator import CollectiveKind, CommEvent
+
+        a, b = sorted((int(a), int(b)))
+        if a == b or not (0 <= a and b < self.world):
+            raise ValueError(f"pair ({a}, {b}) invalid for world {self.world}")
+        if self.link_map.is_relayed(a, b):
+            return 0.0, "already_relayed"  # already on the store: flap is moot
+
+        total = self.detect_failure(f"l{a}_{b}")
+        # re-punching goes through the rendezvous server (fresh NAT
+        # mappings) — a rendezvous outage stalls the ladder here
+        total += self._rendezvous_outage_wait()
+
+        direct = self.link_map.link(a, b).channel
+        if self.fabric is not None:
+            punch_s = self.fabric.platform.init_per_level_s
+            retries = self.fabric.max_retries
+        else:
+            punch_s = 0.0
+            retries = 3
+        backoff0 = 0.5
+
+        if not permanent:
+            # attempt 1 lands on the still-flapping link (one wasted RTT),
+            # the backoff outlasts the flap, attempt 2 punches clean
+            t = direct.alpha_s + backoff0 + punch_s
+            self.log_event(CommEvent(
+                CollectiveKind.BOOTSTRAP, self.world, 0, t,
+                algo=f"repunch_l{a}_{b}",
+            ))
+            return total + t, "repunched"
+
+        # permanent: burn every retry (attempt + growing backoff), then
+        # register relay mailboxes for the pair — one PUT/GET round trip
+        # per endpoint, same price as a bootstrap-time relay fallback
+        t = sum(direct.alpha_s + backoff0 * (2.0 ** i) for i in range(retries))
+        self.log_event(CommEvent(
+            CollectiveKind.BOOTSTRAP, self.world, 0, t,
+            algo=f"repunch_l{a}_{b}",
+        ))
+        total += t
+        relay = self.link_map.fallback
+        per_obj = relay.alpha_s + relay.store_alpha_s
+        t_deg = 2.0 * per_obj
+        self.link_map.degrade(a, b)
+        self.log_event(CommEvent(
+            CollectiveKind.BOOTSTRAP, self.world, 0, t_deg,
+            algo=f"degrade_l{a}_{b}", relay=relay.name, relayed_pairs=1,
+        ))
+        return total + t_deg, "degraded"
+
+    def shrink(self, dead_ranks: Iterable[int],
+               policy: str = "incremental") -> float:
+        """Evict confirmed-dead ranks and compact the world — the scale-down
+        inverse of :meth:`expand`.
+
+        ``policy="incremental"`` keeps the live fabric: survivors already
+        hold punched links to each other, so the resize collapses to
+
+        1. ``shrink_membership`` — the coordinator publishes the survivor
+           list + new rank labels through the relay store (one PUT + one GET
+           per survivor wave: ``2 * per_obj``);
+        2. ``shrink_relay_gc`` — relay mailboxes of pairs touching a dead
+           rank are torn down (one store round trip each);
+        3. ``shrink_sync`` — survivors agree on the compacted world: a
+           zero-byte barrier down the punched tree (``ceil(log2 S)`` alpha
+           rounds), or one store round trip when the fabric is staged.
+
+        ``policy="cold"`` prices the alternative this machinery avoids: tear
+        everything down and re-bootstrap the survivor world from scratch
+        (``shrink_cold_rebootstrap`` — the full punch cascade again).
+
+        Either way the ``LinkMap`` compacts (survivors relabel to 0..S-1,
+        surviving relays keep their channels), the rendezvous table shrinks,
+        ``rank_providers`` compacts, and the evicted ranks land in
+        ``self.evicted``.  Implicit all-direct sessions compact for free.
+        Returns the summed modeled seconds of the ``shrink_*`` events.
+        """
+        from repro.core.communicator import CollectiveKind, CommEvent
+
+        dead = sorted({int(r) for r in dead_ranks})
+        if not dead:
+            return 0.0
+        for r in dead:
+            if not (0 <= r < self.world):
+                raise ValueError(f"rank {r} out of range for world {self.world}")
+        survivors = [r for r in range(self.world) if r not in set(dead)]
+        if not survivors:
+            raise ValueError("cannot shrink away the whole world")
+        if policy not in ("incremental", "cold"):
+            raise ValueError(f"unknown shrink policy {policy!r}")
+
+        # record evictions (provider read before compaction)
+        for r in dead:
+            self.evicted.append(
+                {"rank": r, "provider": self.rank_providers[r]})
+
+        new_world = len(survivors)
+        dead_pairs = [
+            p for p in self.link_map.relayed_pairs()
+            if p[0] in set(dead) or p[1] in set(dead)
+        ]
+
+        total = 0.0
+        if self.fabric is not None:
+            # membership updates route through the rendezvous/relay store —
+            # an outage window stalls the shrink like any registration
+            total += self._rendezvous_outage_wait()
+            relay = self.link_map.fallback
+            per_obj = relay.alpha_s + relay.store_alpha_s
+            direct = self.fabric.direct_channel
+
+            def emit(t, algo, **kw):
+                nonlocal total
+                total += t
+                self.log_event(CommEvent(
+                    CollectiveKind.BOOTSTRAP, new_world, 0, t, algo=algo, **kw,
+                ))
+
+            if policy == "incremental":
+                emit(2.0 * per_obj, "shrink_membership")
+                if dead_pairs:
+                    emit(len(dead_pairs) * per_obj, "shrink_relay_gc",
+                         relay=relay.name, relayed_pairs=len(dead_pairs))
+                if direct.staged:
+                    emit(2.0 * (direct.alpha_s + direct.store_alpha_s),
+                         "shrink_sync")
+                else:
+                    levels = (max(1, math.ceil(math.log2(new_world)))
+                              if new_world > 1 else 0)
+                    emit(levels * direct.alpha_s, "shrink_sync")
+            else:
+                # cold: what the incremental path avoids — survivors tear
+                # down and rebuild the whole session at the survivor world
+                self_world = self.world
+                self.world = new_world  # price at the survivor world
+                try:
+                    t_cold = self.full_rebootstrap_time_s()
+                finally:
+                    self.world = self_world
+                # full_rebootstrap prices the *current* relay set; drop the
+                # dead pairs' mailboxes from the bill (they are not rebuilt)
+                t_cold -= sum(
+                    2.0 * (self.link_map.link(a, b).channel.alpha_s
+                           + self.link_map.link(a, b).channel.store_alpha_s)
+                    for a, b in dead_pairs
+                )
+                emit(t_cold, "shrink_cold_rebootstrap")
+
+        # compact membership: link table, rendezvous slots, providers
+        self.link_map.compact(dead)
+        if self.server is not None:
+            self.server.shrink(dead)
+        self.rank_providers = [
+            p for r, p in enumerate(self.rank_providers) if r not in set(dead)
+        ]
+        self.world = new_world
+        return total
+
     def rebootstrap_rank(self, rank: int) -> float:
         """Re-join a deadline-killed / preempted rank through the session.
 
@@ -501,6 +829,9 @@ class CommSession:
             raise ValueError(f"rank {rank} out of range for world {self.world}")
         if self.fabric is None:
             return 0.0
+        # re-registration needs the rendezvous server: an outage window
+        # stalls the re-join for the retry ladder (priced as its own event)
+        wait = self._rendezvous_outage_wait()
         if self.server is not None:
             self.server.reassign_rank(int(rank), f"10.0.0.{int(rank)}")
         direct = self.fabric.direct_channel
@@ -514,7 +845,7 @@ class CommSession:
         self.log_event(CommEvent(
             CollectiveKind.BOOTSTRAP, self.world, 0, t, algo=f"rebootstrap_r{int(rank)}",
         ))
-        return t
+        return t + wait
 
     def expand(
         self,
@@ -576,12 +907,13 @@ class CommSession:
         old_world = self.world
         new_world = old_world + k
 
+        # registration goes through the rendezvous server: pay any outage
+        total = self._rendezvous_outage_wait()
+
         # 1. registration against the grown admission bound (warm server)
         self.server.grow(k)
         for w in range(old_world, new_world):
             self.server.assign_rank(f"10.0.0.{w}")
-
-        total = 0.0
 
         def emit(t, algo, **kw):
             nonlocal total

@@ -154,17 +154,20 @@ class Tracer:
     def ingest_comm_event(self, ev, ranks: Iterable[int], t0: float | None = None):
         """Mirror one :class:`~repro.core.communicator.CommEvent` onto every
         participating rank — ``bootstrap`` lane for session lifecycle
-        events, ``comm`` for collectives.  A collective synchronizes its
-        group, so all ranks get the same interval, starting no earlier than
-        any member's lane cursor."""
-        lane = "bootstrap" if ev.kind.value == "bootstrap" else "comm"
+        events, ``overhead`` for failure-detector probes, ``comm`` for
+        collectives.  A collective synchronizes its group, so all ranks get
+        the same interval, starting no earlier than any member's lane
+        cursor."""
+        kindv = ev.kind.value
+        lane = ("bootstrap" if kindv == "bootstrap"
+                else "overhead" if kindv == "detect" else "comm")
         ranks = [int(r) for r in ranks]
         if t0 is None:
             t0 = self.group_free_at(ranks, lane)
         out = []
         for r in ranks:
             out.append(self.span(
-                r, lane, ev.algo if lane == "bootstrap" else ev.kind.value,
+                r, lane, kindv if lane == "comm" else ev.algo,
                 t0=max(t0, self.lane_end(r, lane)),
                 duration_s=ev.time_s, nbytes=ev.total_bytes,
                 algo=ev.algo, relay=ev.relay, relayed_pairs=ev.relayed_pairs,

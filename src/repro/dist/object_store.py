@@ -70,7 +70,7 @@ class StoreOp:
     """One priced storage operation (mirrors ``core.communicator.CommEvent``:
     what moved, how big it was, and what the channel model says it cost)."""
 
-    kind: str       # "put" | "get" | "head" | "list" | "delete"
+    kind: str       # "put" | "get" | "head" | "list" | "delete" | "outage"
     key: str
     nbytes: int
     time_s: float
@@ -87,8 +87,22 @@ class Store:
         # the "store" lane of trace_rank; the op log stays the thin view
         self.tracer = None
         self.trace_rank = 0
+        # armed fault-domain context (core.faults.ArmedFaults): while a
+        # store_outages window is active, every PUT/GET pays the outage
+        # retry ladder as an extra "outage" op before landing
+        self._armed = None
+        self._fault_step = 0
 
     # -- op accounting -------------------------------------------------------
+
+    def arm_faults(self, armed, step: int = 0) -> None:
+        """Attach one run's :class:`~repro.core.faults.ArmedFaults` so
+        ``store_outages`` windows price into this store's op log."""
+        self._armed = armed
+        self._fault_step = int(step)
+
+    def set_fault_step(self, step: int) -> None:
+        self._fault_step = int(step)
 
     def attach_tracer(self, tracer, rank: int = 0):
         """Mirror every logged op as a ``store``-lane span of ``rank`` on
@@ -118,6 +132,13 @@ class Store:
         return op
 
     def _record(self, kind: str, key: str, nbytes: int) -> StoreOp:
+        if kind in ("put", "get") and self._armed is not None:
+            penalty = self._armed.outage_penalty_s("store", self._fault_step)
+            if penalty > 0.0:
+                # the op retries through the outage window (exponential
+                # backoff) and lands once it lifts; the wait is its own op
+                # so byte/request accounting of the real op stays exact
+                self._emit(StoreOp("outage", key, 0, penalty))
         return self._emit(
             StoreOp(kind, key, int(nbytes), self._price(kind, int(nbytes)))
         )

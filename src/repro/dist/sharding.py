@@ -242,3 +242,38 @@ def shardings_for(mesh, specs: Any) -> Any:
         specs,
         is_leaf=lambda s: isinstance(s, PartitionSpec),
     )
+
+
+def repartition_states(states: list, new_world: int) -> list:
+    """Repartition per-rank BSP state over a different world size.
+
+    The mid-run shrink path (``BSPRuntime.run(recovery_policy="shrink")``)
+    rolls back to the last checkpoint — a list of ``old_world`` per-rank
+    states — and redistributes it over the survivors.  Supported shapes:
+
+    - every state a numpy array: concatenate on axis 0 and split into
+      ``new_world`` contiguous chunks (``np.array_split`` semantics — the
+      global concatenation is preserved exactly, chunk sizes differ by at
+      most one row);
+    - every state a list/tuple: flatten and re-chunk the same way;
+    - anything else raises ``TypeError`` — pass an explicit
+      ``repartition=`` callable to the runtime for richer state.
+    """
+    import numpy as np
+
+    new_world = int(new_world)
+    if new_world < 1:
+        raise ValueError("new_world must be >= 1")
+    states = list(states)
+    if all(isinstance(s, np.ndarray) for s in states):
+        flat = np.concatenate([np.atleast_1d(s) for s in states], axis=0)
+        return list(np.array_split(flat, new_world, axis=0))
+    if all(isinstance(s, (list, tuple)) for s in states):
+        flat = [x for s in states for x in s]
+        bounds = np.linspace(0, len(flat), new_world + 1).astype(int)
+        return [flat[bounds[i]:bounds[i + 1]] for i in range(new_world)]
+    raise TypeError(
+        "repartition_states handles per-rank numpy arrays or lists/tuples; "
+        f"got {sorted({type(s).__name__ for s in states})} — pass an "
+        "explicit repartition= callable for richer state"
+    )

@@ -45,12 +45,13 @@ from typing import Any, Callable, Iterable
 
 import numpy as np
 
+from repro.core import algorithms as _algorithms
 from repro.core import faults as _faults
 from repro.core import netsim
 from repro.core import session as _session
 from repro.core import trace as _trace
 from repro.core.communicator import CollectiveKind, Communicator
-from repro.jobs.futures import Future
+from repro.jobs.futures import ANY_COMPLETED, Future, wait
 
 
 class TaskError(RuntimeError):
@@ -149,6 +150,14 @@ class JobReport:
     reduce_s: float = 0.0       # reducer invocation compute
     reduce_cost_usd: float = 0.0
     trace_base_s: float = 0.0   # tracer offset of this job's task t=0
+    # the placer's winning bid when the executor resolved its provider via
+    # workload= (algorithms.select_placement); None for explicit providers
+    placement: dict | None = None
+    # incremental map_reduce: partial folds streamed as futures completed;
+    # pipeline_end_s is the modeled end of the last fold (task clock), so
+    # total_s reflects reduce-overlapped-with-map instead of the strict sum
+    partial_reduces: int = 0
+    pipeline_end_s: float | None = None
 
     @property
     def tasks_s(self) -> float:
@@ -158,6 +167,8 @@ class JobReport:
 
     @property
     def total_s(self) -> float:
+        if self.pipeline_end_s is not None:
+            return self.init_s + self.pipeline_end_s
         return self.init_s + self.tasks_s + self.comm_s + self.reduce_s
 
     @property
@@ -207,6 +218,13 @@ class JobExecutor:
     overrides the communication fabric the job's session bootstraps on (a
     :class:`~repro.core.session.Fabric` or ``session.FABRICS`` name);
     default: the provider's own fabric.
+
+    Alternatively pass ``workload=`` (an :class:`~repro.core.algorithms
+    .Workload`) instead of a provider: the executor asks the cost-aware
+    placer (:func:`algorithms.select_placement`) for the cheapest registered
+    provider meeting ``placement_deadline_s`` (no deadline: cheapest
+    overall) and runs there; the winning bid is recorded on the executor
+    (``self.placement``) and in every :class:`JobReport`.
     """
 
     def __init__(
@@ -221,7 +239,24 @@ class JobExecutor:
         cpu_scale: float = 1.0,
         algorithm: str = "auto",
         tracer: "_trace.Tracer | None" = None,
+        workload: "_algorithms.Workload | None" = None,
+        placement_deadline_s: float | None = None,
+        placement_providers: "Iterable[str] | None" = None,
     ):
+        self.placement: "_algorithms.Placement | None" = None
+        if workload is not None:
+            if provider is not None:
+                raise ValueError(
+                    "pass provider= or workload= (placer-resolved), not both")
+            candidates = (
+                tuple(placement_providers) if placement_providers is not None
+                else netsim.providers()
+            )
+            deadline = (float(placement_deadline_s)
+                        if placement_deadline_s is not None else float("inf"))
+            self.placement = _algorithms.select_placement(
+                workload, candidates, deadline)
+            provider = self.placement.provider
         # the ONLY run-location path: the PR 6 registry via resolve_provider
         self.provider = netsim.resolve_provider(provider)
         if fabric is None:
@@ -405,6 +440,11 @@ class JobExecutor:
         # one comm session per job: bootstrap (rendezvous + punch or store
         # rendezvous) is the job's priced init, exactly BSPRuntime's shape
         sess = _session.CommSession.bootstrap(slots, self.fabric)
+        if plan.any_infra_faults:
+            # the shared adversary hits this surface too: store outages
+            # price into the job's relayed/staged collectives (the jobs
+            # attempt axis stands in for the fault clock's step axis)
+            sess.arm_faults(armed, step=0)
         if _session_holder is not None:
             _session_holder.append(sess)
         # backfill lays the bootstrap spans; live mirroring stays off because
@@ -415,6 +455,8 @@ class JobExecutor:
             mem_gb=self.mem_gb, ntasks=len(args), workers=slots,
             init_s=sess.bootstrap_time_s,
             trace_base_s=self.tracer.end_s,
+            placement=(dataclasses.asdict(self.placement)
+                       if self.placement is not None else None),
         )
         slot_free = [0.0] * slots
         records: list[TaskRecord] = []
@@ -461,11 +503,22 @@ class JobExecutor:
         reduce_fn: Callable[[list[Any]], Any],
         *,
         faults: "_faults.FaultPlan | None" = None,
+        incremental: bool = False,
     ) -> Future:
         """Map, then gather the results over the session-backed communicator
         (priced CommEvents) and run ``reduce_fn(results)`` as one more
         billed invocation.  Returns the reducer's future; its ``job`` is the
-        whole job's :class:`JobReport`."""
+        whole job's :class:`JobReport`.
+
+        ``incremental=True`` streams instead of batching: as ``wait(fs,
+        ANY_COMPLETED)`` surfaces each completed batch, its results are
+        gathered and folded into the running accumulator
+        (``reduce_fn([acc] + batch)``) while later map tasks are still
+        running.  One warm reducer drains the batches, so the reduce is
+        billed once and — for an associative ``reduce_fn`` — the final
+        result and total $ match the batch path; the job's modeled end
+        (``pipeline_end_s``) is the pipelined fold recursion, which beats
+        ``tasks + gather + reduce`` whenever task completions are spread."""
         holder: list = []
         futures = self.map(
             map_fn, iterdata, faults=faults, _kind="map_reduce",
@@ -481,11 +534,13 @@ class JobExecutor:
                 exception=f.exception(), record=None, job=report,
             )
             return red
+        comm = Communicator(session=sess, algorithm=self.algorithm)
+        comm.reset_events()
+        if incremental:
+            return self._reduce_incremental(report, comm, futures, reduce_fn)
         results = [f.result() for f in futures]
         # shuffle the map outputs to the reducer slot: each slot contributes
         # its tasks' pickled payloads to a rooted gather (priced round)
-        comm = Communicator(session=sess, algorithm=self.algorithm)
-        comm.reset_events()
         per_slot: list[list[bytes]] = [[] for _ in range(report.workers)]
         for f in futures:
             per_slot[f.task_id % report.workers].append(
@@ -521,4 +576,82 @@ class JobExecutor:
         return Future(
             report.job_id, -1, report.total_s,
             result=reduced, record=None, job=report,
+        )
+
+    def _reduce_incremental(
+        self,
+        report: JobReport,
+        comm: Communicator,
+        futures: list[Future],
+        reduce_fn: Callable[[list[Any]], Any],
+    ) -> Future:
+        """Streaming reduce: fold each batch as ``wait(ANY)`` surfaces it.
+
+        The modeled clock pipelines: fold *k* starts at ``max(batch k ready
+        + its gather, fold k-1 done)`` — one warm reducer drains batches
+        sequentially while later map tasks are still running.  The reducer
+        is billed once (one request + the summed fold GB-seconds), so total
+        $ matches the batch path up to fold-measurement noise."""
+        tr = self.tracer
+        acc: Any = None
+        nparts = 0
+        red_total = 0.0     # summed fold compute (the reducer's billed time)
+        red_done = 0.0      # modeled end of the last fold (task clock)
+        t_comm = report.trace_base_s
+        # the reducer is its own warm invocation: give it a fresh trace lane
+        # past the slot and backup lanes (its folds overlap later map tasks
+        # by design, so it can't share slot 0's compute lane)
+        reducer_rank = report.workers + sum(
+            1 for t in report.tasks for a in t.attempts if a.speculative)
+        pending = list(futures)
+        while pending:
+            done, pending = wait(pending, ANY_COMPLETED)
+            t_batch = max(f.done_s for f in done)
+            batch = sorted(done, key=lambda f: f.task_id)
+            per_slot: list[list[bytes]] = [[] for _ in range(report.workers)]
+            for f in batch:
+                per_slot[f.task_id % report.workers].append(
+                    pickle.dumps(f.result()))
+            payloads = [
+                np.frombuffer(b"".join(chunk) or b"\0", dtype=np.uint8)
+                for chunk in per_slot
+            ]
+            n0 = len(comm.events)
+            before = comm.comm_time_s
+            comm.gather(payloads, root=0)
+            gather_s = comm.comm_time_s - before
+            t0 = time.perf_counter()
+            acc = reduce_fn(
+                ([acc] if nparts else []) + [f.result() for f in batch])
+            fold_s = (
+                (time.perf_counter() - t0)
+                / self.provider.platform.cpu_speed * self.cpu_scale
+            )
+            red_total += fold_s
+            # the fold waits for this batch's gather AND the previous fold
+            fold_t0 = max(t_batch + gather_s, red_done)
+            red_done = fold_t0 + fold_s
+            nparts += 1
+            # timeline: gather spans as the batch lands; the fold rides the
+            # reducer's lane at $0 — its compute is billed once at the end
+            t_comm = max(t_comm, report.trace_base_s + t_batch)
+            for ev in comm.events[n0:]:
+                if ev.kind is CollectiveKind.BOOTSTRAP:
+                    continue
+                spans = tr.ingest_comm_event(
+                    ev, range(report.workers), t0=t_comm)
+                t_comm = max(s.t1 for s in spans)
+            tr.span(
+                reducer_rank, "compute", f"reduce_part{nparts - 1}",
+                t0=report.trace_base_s + fold_t0, duration_s=fold_s,
+                usd=0.0, job=report.job_id, partial=True,
+            )
+        report.comm_s = comm.comm_time_s
+        report.reduce_s = red_total
+        report.reduce_cost_usd = self._bill(red_total)
+        report.partial_reduces = nparts
+        report.pipeline_end_s = red_done
+        return Future(
+            report.job_id, -1, report.total_s,
+            result=acc, record=None, job=report,
         )

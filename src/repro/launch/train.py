@@ -80,6 +80,9 @@ def train(
     burst_at: int | None = None,
     burst_world: int = 0,
     burst_provider: str | None = None,
+    shrink_at: int | None = None,
+    shrink_world: int = 0,
+    recovery_policy: str = "incremental",
     tracer=None,
     log=print,
 ):
@@ -104,6 +107,16 @@ def train(
     priced fabric, never the single-host training math, so kill/resume
     traces stay identical; a run resumed *past* the burst step re-applies
     the expansion to its fresh session so the modeled world matches.
+
+    ``shrink_at``/``shrink_world`` model the inverse event — a fault domain
+    evicting the top ``shrink_world`` ranks at that global step.  The
+    session prices the detector (suspect -> confirm DETECT events) and then
+    shrinks per ``recovery_policy``: ``"incremental"`` (membership
+    compaction + relay GC + a survivor barrier, ≪ re-bootstrap) or
+    ``"cold"`` (tear down and re-bootstrap the survivor world).  Like
+    bursts this only changes the priced fabric — the single-host training
+    math and kill/resume traces are untouched, and a run resumed *past* the
+    shrink step re-applies it to its fresh session.
 
     ``tracer`` (a :class:`repro.core.trace.Tracer`) collects the run's full
     modeled timeline on rank 0's lanes: per-step ``compute`` spans (measured
@@ -218,6 +231,25 @@ def train(
             f"modeled vs {full_s:.1f}s cold re-bootstrap of the grown world "
             f"({expand_s / max(full_s, 1e-9):.0%})")
 
+    def apply_shrink():
+        nonlocal grad_comm
+        dead = list(range(comm_session.world - shrink_world,
+                          comm_session.world))
+        label = "_".join(f"r{r}" for r in dead)
+        detect_s = comm_session.detect_failure(label)
+        shrink_s = comm_session.shrink(dead, policy=recovery_policy)
+        if grad_comm is not None:
+            from repro.core.communicator import Communicator
+
+            grad_comm = Communicator(session=comm_session)
+        # baseline: what a cold re-bootstrap of the survivor world costs
+        full_s = comm_session.full_rebootstrap_time_s()
+        log(f"shrink: ranks {dead} evicted at step {shrink_at} -> world "
+            f"{comm_session.world}; detect {detect_s:.1f}s + "
+            f"{recovery_policy} shrink {shrink_s:.1f}s modeled vs "
+            f"{full_s:.1f}s cold re-bootstrap of the survivor world "
+            f"({(detect_s + shrink_s) / max(full_s, 1e-9):.0%})")
+
     do_burst = (
         comm_session is not None and burst_at is not None and burst_world > 0
     )
@@ -225,6 +257,13 @@ def train(
         # resumed past the burst: the expanded world is part of history
         apply_burst()
         do_burst = False
+    do_shrink = (
+        comm_session is not None and shrink_at is not None and shrink_world > 0
+    )
+    if do_shrink and start > shrink_at:
+        # resumed past the eviction: the shrunk world is part of history
+        apply_shrink()
+        do_shrink = False
 
     # start the iterator at the global step so a resumed run consumes the
     # same data slices an uninterrupted run would (loss-trace continuity)
@@ -236,6 +275,9 @@ def train(
         if do_burst and step == burst_at:
             apply_burst()
             do_burst = False
+        if do_shrink and step == shrink_at:
+            apply_shrink()
+            do_shrink = False
         t_fetch = time.perf_counter()
         batch_data = next(it)
         fetch_s = time.perf_counter() - t_fetch
@@ -308,6 +350,16 @@ def main():
     ap.add_argument("--burst-provider", default=None,
                     help="provider the burst workers come from (cross-provider "
                          "pairs relay; default: the core fabric's)")
+    ap.add_argument("--shrink-at", type=int, default=None,
+                    help="global step at which a fault domain evicts workers "
+                         "from the modeled session (requires --shrink-world)")
+    ap.add_argument("--shrink-world", type=int, default=0,
+                    help="workers evicted at --shrink-at (the top ranks)")
+    ap.add_argument("--recovery-policy", default="incremental",
+                    choices=("incremental", "cold"),
+                    help="how the session recovers from the eviction: "
+                         "incremental shrink (membership compaction + relay "
+                         "GC) or a cold re-bootstrap of the survivors")
     ap.add_argument("--trace-out", default=None,
                     help="write the run's modeled span timeline here as raw "
                          "JSON (convert with scripts/trace_to_chrome.py for "
@@ -319,6 +371,7 @@ def main():
     comm_session = None
     # --trace-out wants comm spans too, so it also builds the modeled session
     if args.resume or (args.burst_at is not None and args.burst_world > 0) \
+            or (args.shrink_at is not None and args.shrink_world > 0) \
             or args.trace_out is not None:
         from repro.core.session import CommSession
 
@@ -335,6 +388,8 @@ def main():
         comm_session=comm_session,
         burst_at=args.burst_at, burst_world=args.burst_world,
         burst_provider=args.burst_provider,
+        shrink_at=args.shrink_at, shrink_world=args.shrink_world,
+        recovery_policy=args.recovery_policy,
         tracer=tracer,
     )
     if tracer is not None:

@@ -514,3 +514,78 @@ class TestFaultPlan:
             FaultPlan(straggles=((0, 1),))
         with pytest.raises(ValueError):
             FaultPlan(kill_rate=1.5)
+
+
+# -- incremental reduce + placer-resolved providers (ISSUE 9 satellites) ------
+
+
+class TestIncrementalReduce:
+    def test_matches_batch_result_and_cost(self):
+        """Streaming partial reduces fold to the batch answer, and the one
+        warm reducer bills like the batch reducer (request-dominated)."""
+        plan = FaultPlan(straggles=((0, 5, 10.0),))
+        kw = dict(workers=4, speculation=SpeculationPolicy(enabled=False))
+        batch = fresh_executor(**kw).map_reduce(
+            lambda x: x * x, range(12), sum, faults=plan)
+        inc = fresh_executor(**kw).map_reduce(
+            lambda x: x * x, range(12), sum, faults=plan, incremental=True)
+        assert inc.result() == batch.result() == sum(x * x for x in range(12))
+        assert inc.job.cost_usd == pytest.approx(batch.job.cost_usd, rel=0.05)
+        # the straggler spread completions: several wait(ANY) batches fired
+        assert inc.job.partial_reduces >= 2
+        assert batch.job.partial_reduces == 0
+
+    def test_pipeline_end_drives_total(self):
+        ex = fresh_executor(workers=2)
+        red = ex.map_reduce(lambda x: x, range(6), sum, incremental=True)
+        rep = red.job
+        assert rep.pipeline_end_s is not None
+        # the last fold cannot land before the last map task finished
+        assert rep.pipeline_end_s >= rep.tasks_s
+        assert rep.total_s == pytest.approx(rep.init_s + rep.pipeline_end_s)
+        assert red.done_s == pytest.approx(rep.total_s)
+        assert rep.comm_s > 0.0 and rep.reduce_cost_usd > 0.0
+
+    def test_incremental_propagates_map_failure(self):
+        def boom(x):
+            raise ValueError("down")
+
+        ex = fresh_executor(retry=RetryPolicy(max_retries=0))
+        red = ex.map_reduce(boom, range(3), sum, incremental=True)
+        with pytest.raises(ValueError, match="down"):
+            red.result()
+
+
+class TestPlacerResolvedProvider:
+    def test_workload_resolves_via_placer_and_records_bid(self):
+        from repro.core import algorithms
+
+        wl = algorithms.Workload(world=8, compute_s=5.0)
+        ex = JobExecutor(workload=wl)
+        oracle = algorithms.select_placement(
+            wl, netsim.providers(), float("inf"))
+        assert ex.provider.name == oracle.provider
+        assert ex.placement.cost_usd == oracle.cost_usd
+        rep = ex.map(lambda x: x, range(4))[0].job
+        assert rep.placement["provider"] == ex.provider.name
+        assert rep.placement["feasible"] is True
+        assert rep.provider == ex.provider.name
+
+    def test_deadline_and_candidates_narrow_the_bid(self):
+        from repro.core import algorithms
+
+        wl = algorithms.Workload(world=8, compute_s=5.0)
+        ex = JobExecutor(workload=wl, placement_providers=("aws-lambda",))
+        assert ex.provider.name == "aws-lambda"
+        assert ex.placement.provider == "aws-lambda"
+
+    def test_provider_and_workload_conflict_raises(self):
+        from repro.core import algorithms
+
+        wl = algorithms.Workload(world=4, compute_s=1.0)
+        with pytest.raises(ValueError, match="not both"):
+            JobExecutor(provider="aws-lambda", workload=wl)
+
+    def test_explicit_provider_records_no_placement(self):
+        rep = fresh_executor().map(lambda x: x, [1])[0].job
+        assert rep.placement is None

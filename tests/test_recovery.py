@@ -1,0 +1,456 @@
+"""Self-healing comm fabric: fault domains, priced detector, mid-run shrink.
+
+Covers the ISSUE-9 tentpole: infrastructure fault domains on ``FaultPlan``
+(link flaps, store/rendezvous outage windows, permanent rank losses) with
+per-source counter bookkeeping, the priced failure detector (DETECT events
+on the overhead lane, never firing on a healthy world — property test),
+the per-link recovery ladder (re-punch vs degrade-to-relay, with degraded
+collectives bit-identical to direct — property test), and
+``CommSession.shrink`` + ``BSPRuntime.run(recovery_policy=...)``:
+kill -> detect -> rollback -> shrink -> repartition reproduces the
+uninterrupted trajectory while pricing far below a cold re-bootstrap.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    BSPRuntime,
+    CollectiveKind,
+    Communicator,
+    CommSession,
+    FaultPlan,
+    cost_model,
+    hybrid_session,
+    netsim,
+)
+from repro.dist.object_store import S3Store
+from repro.dist.sharding import repartition_states
+
+
+# -- the plan's fault domains -------------------------------------------------
+
+
+class TestFaultDomains:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="a == b"):
+            FaultPlan(link_flaps=((0, 2, 2),))
+        with pytest.raises(ValueError, match="mode"):
+            FaultPlan(link_flaps=((0, 1, 2, "flaky"),))
+        with pytest.raises(ValueError, match="half-open"):
+            FaultPlan(store_outages=((3, 3),))
+        with pytest.raises(ValueError, match="half-open"):
+            FaultPlan(rendezvous_outages=((2,),))
+        with pytest.raises(ValueError, match="rank_loss"):
+            FaultPlan(rank_losses=((1,),))
+        with pytest.raises(ValueError, match="flap_rate"):
+            FaultPlan(flap_rate=1.5)
+        with pytest.raises(ValueError, match="outage_retries"):
+            FaultPlan(outage_retries=0)
+
+    def test_outage_penalty_closed_form(self):
+        # 3 exponential backoffs of 0.5 s: 0.5 + 1 + 2
+        assert FaultPlan().outage_penalty_s == pytest.approx(3.5)
+        assert FaultPlan(
+            outage_retries=2, outage_backoff_s=1.0
+        ).outage_penalty_s == pytest.approx(3.0)
+
+    def test_counters_track_sources_independently(self):
+        """ISSUE satellite: a coordinate where several sources contribute
+        counts each of them, and fired() breaks the totals down."""
+        plan = FaultPlan(
+            kills=((0, 0),), kill_rate=1.0,
+            straggles=((0, 0, 1.0), (0, 0, 2.0)), straggle_rate=1.0,
+            straggle_s=5.0,
+            straggle_injector=lambda s, r: 0.25,
+        )
+        armed = plan.armed()
+        assert armed.fail(0, 0)       # scheduled kill burns first
+        assert armed.fail(0, 0)       # then the rate draw (once/coordinate)
+        assert not armed.fail(0, 0)   # both sources exhausted here
+        assert armed.kills_by_source == {
+            "injector": 0, "scheduled": 1, "rate": 1}
+        # three independent stragglers on one coordinate: injector +
+        # the two scheduled entries (counted once, summed) + the rate draw
+        extra = armed.extra_delay(0, 0)
+        assert extra == pytest.approx(0.25 + 3.0 + 5.0)
+        assert armed.straggles_by_source == {
+            "injector": 1, "scheduled": 1, "rate": 1}
+        fired = armed.fired()
+        assert fired["kills"] == {
+            "injector": 0, "scheduled": 1, "rate": 1, "total": 2}
+        assert fired["straggles"]["total"] == 3
+
+    def test_link_flaps_fire_once_and_merge_permanent(self):
+        plan = FaultPlan(
+            link_flaps=((1, 3, 0), (1, 0, 3, "permanent"), (1, 1, 2)))
+        armed = plan.armed()
+        assert armed.link_flaps_at(0, 4) == []
+        # duplicate (0,3) entries merged, permanent wins; sorted pairs
+        assert armed.link_flaps_at(1, 4) == [(0, 3, True), (1, 2, False)]
+        assert armed.link_flaps_at(1, 4) == []  # consumed
+        assert armed.flaps_fired == 2
+
+    def test_flap_rate_is_seeded_and_order_independent(self):
+        plan = FaultPlan(flap_rate=0.5, seed=11)
+        a = plan.armed().link_flaps_at(2, 6)
+        b = plan.armed().link_flaps_at(2, 6)
+        assert a == b and all(not perm for _, _, perm in a)
+
+    def test_rank_loss_consumed_once(self):
+        armed = FaultPlan(rank_losses=((2, 5),)).armed()
+        assert not armed.rank_loss(1, 5)
+        assert armed.rank_loss(2, 5)
+        assert not armed.rank_loss(2, 5)
+        assert armed.losses_fired == 1
+
+    def test_outage_windows_half_open(self):
+        plan = FaultPlan(store_outages=((1, 3),),
+                         rendezvous_outages=((2, 4),))
+        armed = plan.armed()
+        assert [armed.store_outage(s) for s in range(5)] == [
+            False, True, True, False, False]
+        assert armed.outage_penalty_s("store", 2) == pytest.approx(3.5)
+        assert armed.outage_penalty_s("store", 0) == 0.0
+        assert armed.outage_penalty_s("rendezvous", 3) == pytest.approx(3.5)
+        assert armed.fired()["outages"] == {
+            "store": 2, "rendezvous": 1, "total": 3}
+
+
+# -- priced failure detection -------------------------------------------------
+
+
+class TestDetector:
+    def test_detect_failure_priced_as_detect_events(self):
+        s = CommSession.bootstrap(8, "lambda")
+        before = s.bootstrap_time_s
+        t = s.detect_failure("r7")
+        d = netsim.DEFAULT_DETECTOR
+        assert t == pytest.approx(d.suspect_s() + d.confirm_s())
+        assert d.suspect_s() == pytest.approx(
+            d.heartbeat_period_s * d.suspect_missed)
+        evs = [e for e in s.events if e.kind == CollectiveKind.DETECT]
+        assert [e.algo for e in evs] == [
+            "detect_suspect_r7", "detect_confirm_r7"]
+        assert s.detect_time_s == pytest.approx(t)
+        # detection is overhead, not bootstrap and not collective traffic
+        assert s.bootstrap_time_s == before
+        assert s.communicator().comm_time_s == 0.0
+
+    def test_detect_events_survive_reset(self):
+        s = CommSession.bootstrap(4, "lambda")
+        s.detect_failure("l0_1")
+        s.reset_events()
+        assert s.detect_time_s > 0.0
+
+    @given(st.integers(min_value=2, max_value=6),
+           st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=10, deadline=None)
+    def test_detector_never_fires_on_healthy_world(self, world, rate):
+        """Property: worker-level faults (stragglers) alone never wake the
+        infrastructure detector — no DETECT events, no recovery seconds."""
+        plan = FaultPlan(straggle_rate=rate, straggle_s=0.5, seed=3)
+        rt = BSPRuntime(world, provider="aws-lambda")
+        _, report = rt.run(
+            [("s0", lambda r, st_, c, w: (st_ or 0) + 1)] * 2,
+            [0] * world, faults=plan, recovery_policy="shrink",
+        )
+        assert rt.session.detect_time_s == 0.0
+        assert rt.session.recovery_time_s == 0.0
+        assert all(
+            s.recovery_s == s.shrink_s == s.rollback_s == 0.0
+            for s in report.supersteps
+        )
+        assert report.world == world and not report.evicted
+
+
+# -- the per-link recovery ladder ---------------------------------------------
+
+
+class TestRecoveryLadder:
+    def test_transient_flap_repunches(self):
+        s = CommSession.bootstrap(8, "lambda")
+        t, action = s.recover_link(2, 5)
+        assert action == "repunched"
+        assert not s.link_map.is_relayed(2, 5)
+        direct = s.link_map.direct
+        expect = (netsim.DEFAULT_DETECTOR.suspect_s()
+                  + netsim.DEFAULT_DETECTOR.confirm_s()
+                  + direct.alpha_s + 0.5
+                  + s.fabric.platform.init_per_level_s)
+        assert t == pytest.approx(expect)
+        assert any(e.algo == "repunch_l2_5" for e in s.events)
+        assert s.recovery_time_s == pytest.approx(t)
+        assert s.bootstrap_time_s == pytest.approx(
+            netsim.LAMBDA_10GB.init_time(8))  # initial bootstrap untouched
+
+    def test_permanent_flap_degrades_to_relay(self):
+        s = CommSession.bootstrap(8, "lambda")
+        t, action = s.recover_link(0, 1, permanent=True)
+        assert action == "degraded"
+        assert s.link_map.is_relayed(0, 1)
+        (deg,) = [e for e in s.events if e.algo == "degrade_l0_1"]
+        assert deg.relayed_pairs == 1
+        direct = s.link_map.direct
+        relay = s.link_map.fallback
+        burn = sum(direct.alpha_s + 0.5 * 2.0 ** i
+                   for i in range(s.fabric.max_retries))
+        expect = (3.5 + burn
+                  + 2.0 * (relay.alpha_s + relay.store_alpha_s))
+        assert t == pytest.approx(expect)
+        # a second flap on the now-relayed pair is moot
+        assert s.recover_link(0, 1) == (0.0, "already_relayed")
+
+    @given(st.integers(min_value=0, max_value=10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_degraded_collectives_bit_identical_to_direct(self, seed):
+        """Property: a mid-run degrade changes pricing, never bytes."""
+        rng = np.random.default_rng(seed)
+        xs = [rng.normal(size=(3, 2)) for _ in range(4)]
+        direct = Communicator(4)
+        s = CommSession.bootstrap(4, "lambda")
+        s.recover_link(0, 2, permanent=True)
+        degraded = s.communicator()
+        for op in ("allreduce", "allgather"):
+            for a, b in zip(getattr(direct, op)(xs),
+                            getattr(degraded, op)(xs)):
+                np.testing.assert_array_equal(a, b)
+        d_ev = [e for e in direct.events
+                if e.kind == CollectiveKind.ALLREDUCE]
+        g_ev = [e for e in degraded.events
+                if e.kind == CollectiveKind.ALLREDUCE]
+        assert g_ev[0].time_s >= d_ev[0].time_s - 1e-12
+        assert g_ev[0].relayed_pairs == 1
+
+    def test_refresh_links_picks_up_degrade(self):
+        s = CommSession.bootstrap(4, "lambda")
+        comm = s.communicator()
+        before = comm.collective_time_s("allreduce", 1 << 16)
+        s.recover_link(0, 1, permanent=True)
+        comm.refresh_links()
+        assert comm.collective_time_s("allreduce", 1 << 16) > before
+
+    def test_rendezvous_outage_stalls_the_ladder(self):
+        healthy = CommSession.bootstrap(8, "lambda")
+        t0, _ = healthy.recover_link(1, 2)
+        s = CommSession.bootstrap(8, "lambda")
+        s.arm_faults(FaultPlan(rendezvous_outages=((0, 1),)).armed(), step=0)
+        t1, _ = s.recover_link(1, 2)
+        assert t1 == pytest.approx(t0 + 3.5)
+        assert any(e.algo == "outage_wait_rendezvous" for e in s.events)
+
+    def test_store_outage_prices_relayed_collectives(self):
+        plan = FaultPlan(store_outages=((0, 1),))
+        h1 = hybrid_session(4, [(0, 1)])
+        clean = h1.communicator()
+        clean.allreduce([np.ones(1024)] * 4)
+        h2 = hybrid_session(4, [(0, 1)])
+        h2.arm_faults(plan.armed(), step=0)
+        hit = h2.communicator()
+        hit.allreduce([np.ones(1024)] * 4)
+        ce, he = clean.events[-1], hit.events[-1]
+        assert he.algo == ce.algo + "+outage"
+        assert he.time_s == pytest.approx(ce.time_s + 3.5)
+        # the +outage suffix must not break the lat/bw decomposition
+        lat, bw = hit.event_lat_bw(he)
+        assert lat + bw == pytest.approx(he.time_s)
+        # direct traffic on a healthy all-direct fabric pays nothing
+        s = CommSession.bootstrap(4, "lambda")
+        s.arm_faults(plan.armed(), step=0)
+        c = s.communicator()
+        c.allreduce([np.ones(1024)] * 4)
+        assert not c.events[-1].algo.endswith("+outage")
+
+
+# -- mid-run shrink -----------------------------------------------------------
+
+
+class TestShrink:
+    def test_incremental_shrink_compacts_and_prices(self):
+        s = CommSession.bootstrap(16, "lambda")
+        t = s.shrink([3, 15])
+        assert s.world == 14
+        assert t > 0.0 and s.shrink_time_s == pytest.approx(t)
+        assert [e["rank"] for e in s.evicted] == [3, 15]
+        algos = [e.algo for e in s.events]
+        assert "shrink_membership" in algos and "shrink_sync" in algos
+        # survivors relabeled 0..13 in the rendezvous table
+        for r in range(14):
+            s.server.peer_address(r)
+        with pytest.raises(Exception):
+            s.server.peer_address(14)
+        assert len(s.rank_providers) == 14
+        # the shrunk fabric still completes collectives
+        out = s.communicator().allreduce([np.ones(8)] * 14)
+        np.testing.assert_array_equal(out[0], np.full(8, 14.0))
+
+    def test_incremental_beats_cold(self):
+        for world in (8, 32):
+            inc = CommSession.bootstrap(world, "lambda")
+            cold = CommSession.bootstrap(world, "lambda")
+            t_inc = inc.shrink([world - 1], policy="incremental")
+            t_cold = cold.shrink([world - 1], policy="cold")
+            assert t_inc < t_cold, (world, t_inc, t_cold)
+            assert any(e.algo == "shrink_cold_rebootstrap"
+                       for e in cold.events)
+
+    def test_shrink_relay_gc_tears_down_dead_mailboxes(self):
+        s = hybrid_session(6, [(0, 5), (1, 2)])
+        s.shrink([5])
+        (gc,) = [e for e in s.events if e.algo == "shrink_relay_gc"]
+        assert gc.relayed_pairs == 1  # only (0,5) touched the dead rank
+        # the surviving relayed pair keeps its relay under the new labels
+        assert s.link_map.relayed_pairs() == ((1, 2),)
+
+    def test_shrink_validation(self):
+        s = CommSession.bootstrap(4, "lambda")
+        assert s.shrink([]) == 0.0
+        with pytest.raises(ValueError, match="out of range"):
+            s.shrink([4])
+        with pytest.raises(ValueError, match="whole world"):
+            s.shrink([0, 1, 2, 3])
+        with pytest.raises(ValueError, match="policy"):
+            s.shrink([0], policy="warm")
+
+    def test_repartition_states_preserves_concatenation(self):
+        states = [np.arange(i * 4, i * 4 + 4, dtype=np.float64)
+                  for i in range(6)]
+        new = repartition_states(states, 5)
+        assert len(new) == 5
+        np.testing.assert_array_equal(
+            np.concatenate(new), np.concatenate(states))
+        lists = repartition_states([[1, 2], [3], [4, 5]], 2)
+        assert [x for part in lists for x in part] == [1, 2, 3, 4, 5]
+        with pytest.raises(TypeError, match="repartition"):
+            repartition_states([{"a": 1}, {"b": 2}], 1)
+
+
+# -- the runtime escalation path ----------------------------------------------
+
+
+def _chunk_states(world, n=8):
+    flat = np.arange(world * n, dtype=np.float64)
+    return [flat[r * n:(r + 1) * n].copy() for r in range(world)]
+
+
+def _step(rank, state, comm, world):
+    if rank == 0:
+        comm.allreduce([np.ones(256)] * world)
+    return state * 2.0 + 1.0
+
+
+class TestBSPRecovery:
+    def test_kill_shrink_resume_reproduces_trajectory(self):
+        """Property at the run level: losing a rank mid-run and shrinking
+        around it yields the exact states an uninterrupted run produces."""
+        world, steps = 6, [(f"s{i}", _step) for i in range(3)]
+        clean, _ = BSPRuntime(world, provider="aws-lambda").run(
+            steps, _chunk_states(world))
+        rt = BSPRuntime(world, provider="aws-lambda",
+                        checkpoint_dir=S3Store())
+        plan = FaultPlan(rank_losses=((1, world - 1),))
+        states, report = rt.run(
+            steps, _chunk_states(world), faults=plan,
+            recovery_policy="shrink")
+        np.testing.assert_array_equal(
+            np.concatenate(states), np.concatenate(clean))
+        assert report.world == world - 1 and rt.world == world - 1
+        assert report.evicted == [
+            {"rank": world - 1, "step": 1, "provider": "aws-lambda"}]
+        s1 = report.supersteps[1]
+        assert s1.recovery_s > 0.0 and s1.shrink_s > 0.0
+        assert s1.rollback_s > 0.0  # the checkpoint re-read was priced
+        assert report.supersteps[0].recovery_s == 0.0
+        # [0..2] indices stay unique (the cost model keys on them)
+        assert [s.index for s in report.supersteps] == [0, 1, 2]
+
+    def test_retry_policy_folds_loss_into_attempt_loop(self):
+        world = 4
+        clean, _ = BSPRuntime(world, provider="aws-lambda").run(
+            [("s0", _step)], _chunk_states(world))
+        rt = BSPRuntime(world, provider="aws-lambda")
+        plan = FaultPlan(rank_losses=((0, 2),))
+        states, report = rt.run(
+            [("s0", _step)], _chunk_states(world), faults=plan,
+            recovery_policy="retry")
+        np.testing.assert_array_equal(
+            np.concatenate(states), np.concatenate(clean))
+        assert report.world == world and not report.evicted
+        assert report.supersteps[0].retries == 1
+
+    def test_shrink_beats_rebootstrap_escalation(self):
+        world = 8
+        plan = FaultPlan(rank_losses=((1, world - 1),))
+        steps = [(f"s{i}", _step) for i in range(3)]
+        _, rep_inc = BSPRuntime(world, provider="aws-lambda").run(
+            steps, _chunk_states(world), faults=plan,
+            recovery_policy="shrink")
+        _, rep_cold = BSPRuntime(world, provider="aws-lambda").run(
+            steps, _chunk_states(world), faults=plan,
+            recovery_policy="rebootstrap")
+        inc = sum(s.shrink_s for s in rep_inc.supersteps)
+        cold = sum(s.shrink_s for s in rep_cold.supersteps)
+        assert 0.0 < inc < cold
+        assert rep_inc.total_s < rep_cold.total_s
+
+    def test_rejects_unknown_recovery_policy(self):
+        rt = BSPRuntime(2, provider="aws-lambda")
+        with pytest.raises(ValueError, match="recovery_policy"):
+            rt.run([("s0", _step)], _chunk_states(2),
+                   recovery_policy="pray")
+
+    def test_evicted_ranks_billed_to_eviction_step(self):
+        world = 4
+        plan = FaultPlan(rank_losses=((1, world - 1),))
+        rt = BSPRuntime(world, provider="aws-lambda")
+        _, report = rt.run(
+            [(f"s{i}", _step) for i in range(3)], _chunk_states(world),
+            faults=plan, recovery_policy="shrink")
+        costs = cost_model.heterogeneous_run_cost(report, rt.session)
+        assert costs["evicted_usd"] > 0.0
+        assert costs["total_usd"] == pytest.approx(
+            sum(costs["per_rank_usd"]) + costs["evicted_usd"])
+        assert len(costs["per_rank_usd"]) == world - 1
+        # the dead rank paid init + superstep 0, never the recovery steps
+        full = cost_model.heterogeneous_run_cost(
+            report, rt.session)["per_rank_usd"][0]
+        assert costs["evicted_usd"] < full
+
+    def test_store_outage_window_prices_checkpoints(self):
+        store = S3Store()
+        rt = BSPRuntime(4, provider="aws-lambda", checkpoint_dir=store)
+        plan = FaultPlan(store_outages=((1, 2),))
+        _, report = rt.run(
+            [(f"s{i}", _step) for i in range(3)], _chunk_states(4),
+            faults=plan)
+        outages = [op for op in store.ops if op.kind == "outage"]
+        assert outages and all(
+            op.time_s == pytest.approx(3.5) for op in outages)
+        # the clean-window steps' checkpoints paid nothing extra
+        clean_store = S3Store()
+        BSPRuntime(4, provider="aws-lambda", checkpoint_dir=clean_store).run(
+            [(f"s{i}", _step) for i in range(3)], _chunk_states(4))
+        assert not [op for op in clean_store.ops if op.kind == "outage"]
+
+    def test_recovery_spans_on_trace(self):
+        world = 4
+        plan = FaultPlan(rank_losses=((1, world - 1),))
+        rt = BSPRuntime(world, provider="aws-lambda")
+        rt.run([(f"s{i}", _step) for i in range(2)], _chunk_states(world),
+               faults=plan, recovery_policy="shrink")
+        detect = [s for s in rt.tracer.spans
+                  if s.lane == "overhead" and s.kind.startswith("detect")]
+        shrink = [s for s in rt.tracer.spans
+                  if s.lane == "bootstrap" and s.kind.startswith("shrink")]
+        assert detect and shrink
+        assert all(s.meta_dict.get("step") == 1 for s in detect)
+        # the ladder ran at superstep entry: ahead of that step's compute
+        compute1 = min(
+            s.t0 for s in rt.tracer.spans
+            if s.lane == "compute" and s.meta_dict.get("step") == 1)
+        assert max(s.t1 for s in detect) <= compute1 + 1e-9
