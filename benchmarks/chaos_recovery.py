@@ -101,7 +101,7 @@ def _run(world: int, plan=None, recovery_policy: str = "retry",
 
 
 def _scenario_point(name: str, world: int, spec: dict,
-                    clean: np.ndarray) -> tuple[dict, "bsp.BSPRuntime"]:
+                    clean: np.ndarray) -> tuple[dict, bsp.BSPRuntime]:
     states, report, rt = _run(
         world, plan=spec["plan"],
         recovery_policy=spec.get("recovery_policy", "retry"),

@@ -61,7 +61,16 @@ def main() -> None:
         ("overlap", overlap),
         ("chaos_recovery", chaos_recovery),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = [a for a in sys.argv[1:] if a != "--sanitize"]
+    sanitize = len(argv) != len(sys.argv) - 1
+    only = argv[0] if argv else None
+
+    tracers: list = []
+    if sanitize:
+        from repro.core import trace as _trace
+
+        _trace.register_audit_sink(tracers.append)
+
     print("name,us_per_call,derived")
     for name, mod in modules:
         if only and name != only:
@@ -69,6 +78,23 @@ def main() -> None:
         t0 = time.time()
         mod.main(report=print)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if sanitize:
+        from repro import analysis
+
+        violations = []
+        for tr in tracers:
+            violations.extend(analysis.check_trace(tr))
+        if violations:
+            print(
+                f"# sanitize: {len(violations)} tracecheck violation(s) "
+                f"across {len(tracers)} tracer(s)", file=sys.stderr,
+            )
+            for v in violations:
+                print(f"# {v}", file=sys.stderr)
+            raise SystemExit(1)
+        print(
+            f"# sanitize: {len(tracers)} tracer(s) clean", file=sys.stderr)
 
 
 if __name__ == "__main__":

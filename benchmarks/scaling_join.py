@@ -65,7 +65,7 @@ def _comm_s(plat: netsim.PlatformModel, world: int, rows_per_worker: int) -> flo
 
 def fit_platform(name: str) -> dict:
     """Least-squares (comm_mult, straggler_frac) on the weak table."""
-    plat = netsim.PLATFORMS[name]
+    plat = netsim.resolve_platform(name)
     weak = PAPER_WEAK[name]
     local10 = weak[0]  # paper-anchored single-node 10-iteration local phase
     rows = []
@@ -90,7 +90,7 @@ def fit_platform(name: str) -> dict:
 
 
 def predict_strong(fit: dict, alpha_mult: float = 0.0) -> list[float]:
-    plat = netsim.PLATFORMS[fit["platform"]]
+    plat = netsim.resolve_platform(fit["platform"])
     # per-row local cost from the paper's strong 1-node anchor
     local10_1 = PAPER_STRONG[fit["platform"]][0]
     preds = []
@@ -111,7 +111,7 @@ def fit_alpha(fit: dict) -> float:
     Physical meaning: small-message exchanges pay more round trips than the
     single-alpha model (connection reuse, TCP acks) — the weak table cannot
     identify this term because bandwidth dominates there."""
-    plat = netsim.PLATFORMS[fit["platform"]]
+    plat = netsim.resolve_platform(fit["platform"])
     base = predict_strong(fit, 0.0)
     num = den = 0.0
     for w, pred, actual in zip(common.WORLDS, base, PAPER_STRONG[fit["platform"]]):

@@ -19,7 +19,7 @@ def _join_step(rank, state, comm, world):
 def run(world: int = 32, rows: int = 2048) -> dict:
     rng = np.random.default_rng(0)
     states = []
-    for r in range(world):
+    for _ in range(world):
         k = rng.permutation(rows).astype(np.int32)
         states.append((
             Table.from_dict({"k": k, "v": k}, capacity=rows * 2),

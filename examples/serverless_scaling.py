@@ -35,7 +35,7 @@ def main():
     print(f"{'platform':18s} {'world':>5s} {'init(s)':>8s} {'step(s)':>8s} {'total(s)':>9s} {'cost($)':>8s}")
     for world in (4, 16, 32):
         for pname in ("lambda-10gb", "ec2-15gb-4vcpu", "rivanna-10gb"):
-            plat = netsim.PLATFORMS[pname]
+            plat = netsim.resolve_platform(pname)
             rt = BSPRuntime(world, platform=plat)
             # inject one worker failure: the runtime re-invokes it
             fails = {(0, 1): True}

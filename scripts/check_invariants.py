@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Standalone invariant lint: stdlib-only, no repo or third-party imports.
+
+Usage::
+
+    python scripts/check_invariants.py [PATH...]     # default: src
+
+Loads the rule engine (``src/repro/analysis/lintcheck.py`` — itself pure
+stdlib ``ast``) directly from its file path, so this script runs in a bare
+interpreter before any dependency is installed.  Output is ruff-style
+``path:line:col: RPA001 message``; exits non-zero on findings.  See the
+rule table in ``src/repro/analysis/__init__.py``.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+_LINTCHECK = REPO / "src" / "repro" / "analysis" / "lintcheck.py"
+
+
+def _load_lintcheck():
+    spec = importlib.util.spec_from_file_location("_lintcheck", _LINTCHECK)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclass processing resolves the module through sys.modules, so the
+    # registration must precede exec_module
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = argv or [str(REPO / "src")]
+    lintcheck = _load_lintcheck()
+    violations = lintcheck.lint_paths(paths)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"check_invariants: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_invariants: clean "
+          f"({len(lintcheck.iter_python_files(paths))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

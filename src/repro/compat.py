@@ -79,7 +79,7 @@ def _install_axis_size() -> None:
     def axis_size(axis_name):
         """Static size of a named mesh axis (inside shard_map).  Old jax:
         ``jax.core.axis_frame`` resolves the bound size directly."""
-        if isinstance(axis_name, (tuple, list)):
+        if isinstance(axis_name, tuple | list):
             n = 1
             for a in axis_name:
                 n *= int(jax.core.axis_frame(a))

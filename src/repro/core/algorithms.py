@@ -83,7 +83,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from collections.abc import Callable
 
 from repro.core import netsim
 
@@ -110,7 +110,7 @@ _KIND_CLASS = {
 
 
 def _as_channel(
-    channel: "netsim.ChannelModel | netsim.ProviderProfile",
+    channel: netsim.ChannelModel | netsim.ProviderProfile,
 ) -> netsim.ChannelModel:
     """Accept a ProviderProfile anywhere a channel is priced: the autotuner
     runs on the provider's direct channel (its punched-pair substrate)."""

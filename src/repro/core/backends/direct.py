@@ -13,7 +13,7 @@ requires pre-negotiated buffer sizes.
 
 from __future__ import annotations
 
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -31,7 +31,8 @@ import json
 import pickle
 import time
 from pathlib import Path
-from typing import Any, Callable, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any
 
 from repro.core import algorithms as _algorithms
 from repro.core import faults as _faults
@@ -162,8 +163,10 @@ class BSPRuntime:
             fabric = _session.provider_fabric(profile)
         else:
             if channel_env is not None:
-                # deprecation warning + compat map live in resolve_provider
-                channel = netsim.resolve_provider(channel_env=channel_env).direct
+                # sanctioned forwarding: this is the documented compat
+                # adapter for the deprecated kwarg — the warning + mapping
+                # live in resolve_provider
+                channel = netsim.resolve_provider(channel_env=channel_env).direct  # noqa: RPA003
             else:
                 channel = None
             platform = platform if platform is not None else netsim.LAMBDA_10GB
@@ -424,14 +427,16 @@ class BSPRuntime:
         for ev in recovery_events or ():
             lane = ("overhead" if ev.kind is CollectiveKind.DETECT
                     else "bootstrap")
+            seq = tr.next_event_seq()
             for r in ranks:
                 tr.span(r, lane, ev.algo, t0=t0,
-                        duration_s=ev.time_s, step=idx)
+                        duration_s=ev.time_s, step=idx, eseq=seq)
             t0 += ev.time_s
         if expand_s > 0.0:
+            seq = tr.next_event_seq()
             for r in ranks:
                 tr.span(r, "bootstrap", "expand", t0=t0,
-                        duration_s=expand_s, step=idx)
+                        duration_s=expand_s, step=idx, eseq=seq)
         t1 = t0 + expand_s
         if overlapped_s is None:
             for r in ranks:
@@ -440,15 +445,17 @@ class BSPRuntime:
                             duration_s=rank_elapsed[r], step=idx)
             t = t1 + compute_s
             if reboot_s > 0.0:
+                seq = tr.next_event_seq()
                 for r in ranks:
                     tr.span(r, "bootstrap", "rebootstrap", t0=t,
-                            duration_s=reboot_s, step=idx)
+                            duration_s=reboot_s, step=idx, eseq=seq)
             t += reboot_s
             for ev in step_events:
+                seq = tr.next_event_seq()
                 for r in ranks:
                     tr.span(r, "comm", ev.kind.value, t0=t,
                             duration_s=ev.time_s, nbytes=ev.total_bytes,
-                            step=idx, algo=ev.algo)
+                            step=idx, algo=ev.algo, eseq=seq)
                 t += ev.time_s
         else:
             k = max(int(chunks), 1)
@@ -466,27 +473,31 @@ class BSPRuntime:
                 b = bw_s / k
                 for i in range(k):
                     s_i = max(t1 + (i + 1) * c_max, f_prev)
+                    seq = tr.next_event_seq()
                     for r in ranks:
                         tr.span(r, "comm", f"overlap#c{i}", t0=s_i,
-                                duration_s=b, step=idx, chunks=k)
+                                duration_s=b, step=idx, chunks=k, eseq=seq)
                     f_prev = s_i + b
             else:
                 f_prev = t1 + compute_s
             if lat_s > 0.0 and step_events:
+                seq = tr.next_event_seq()
                 for r in ranks:
                     tr.span(r, "comm", "latency", t0=f_prev,
-                            duration_s=lat_s, step=idx)
+                            duration_s=lat_s, step=idx, eseq=seq)
                 f_prev += lat_s
             t = max(f_prev, t1 + compute_s)
             if reboot_s > 0.0:
+                seq = tr.next_event_seq()
                 for r in ranks:
                     tr.span(r, "bootstrap", "rebootstrap", t0=t,
-                            duration_s=reboot_s, step=idx)
+                            duration_s=reboot_s, step=idx, eseq=seq)
             t += reboot_s
         if barrier_s > 0.0:
+            seq = tr.next_event_seq()
             for r in ranks:
                 tr.span(r, "comm", "barrier", t0=t,
-                        duration_s=barrier_s, step=idx)
+                        duration_s=barrier_s, step=idx, eseq=seq)
 
     # -- execution ------------------------------------------------------------
 
@@ -609,7 +620,10 @@ class BSPRuntime:
                 attempt = 0
                 deadline_killed = False  # only this rank's re-invocation skips delay
                 while True:
-                    t0 = time.perf_counter()
+                    # sanctioned wall-clock: real host compute is measured
+                    # here and rescaled by platform.cpu_speed below — the
+                    # one place host time enters the modeled clock
+                    t0 = time.perf_counter()  # noqa: RPA001
                     simulated_extra = (
                         armed.extra_delay(idx, rank) if not deadline_killed else 0.0
                     )
@@ -623,7 +637,7 @@ class BSPRuntime:
                         if attempt > max_retries:
                             raise
                         continue
-                    elapsed = (time.perf_counter() - t0) / self.platform.cpu_speed
+                    elapsed = (time.perf_counter() - t0) / self.platform.cpu_speed  # noqa: RPA001
                     elapsed = elapsed * self.cpu_scale + simulated_extra
                     if (
                         deadline_s is not None

@@ -131,7 +131,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Callable, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any
 
 import numpy as np
 
@@ -239,7 +240,7 @@ class Communicator:
         channel: netsim.ChannelModel | None = None,
         algorithm: str = "auto",
         *,
-        session: "_session.CommSession | None" = None,
+        session: _session.CommSession | None = None,
         group: Sequence[int] | None = None,
     ):
         if session is None:
@@ -488,7 +489,7 @@ class Communicator:
         self,
         color: Sequence[int | None],
         key: Sequence[int] | None = None,
-    ) -> list["Communicator | None"]:
+    ) -> list[Communicator | None]:
         """MPI ``comm_split``: partition this communicator's ranks by color.
 
         ``color[r]`` / ``key[r]`` are rank r's values (one entry per local
@@ -787,7 +788,7 @@ class Communicator:
 def make_communicator(
     world_size: int,
     env: str = "direct",
-    provider: "str | netsim.ProviderProfile | None" = None,
+    provider: str | netsim.ProviderProfile | None = None,
 ) -> Communicator:
     """Factory mirroring the paper's ``env`` switch (Listing 1: 'fmi' /
     'fmi-cylon' / storage channels).  ``provider`` names a

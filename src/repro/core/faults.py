@@ -59,7 +59,7 @@ view (scheduled kill counts are consumed as they fire).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import numpy as np
 
@@ -138,7 +138,7 @@ class FaultPlan:
         fail_injector: Injector | None = None,
         straggle_injector: Straggler | None = None,
         deadline_s: float | None = None,
-    ) -> "FaultPlan":
+    ) -> FaultPlan:
         """Adapter for the legacy ``BSPRuntime.run`` injector callables."""
         return cls(
             fail_injector=fail_injector,
@@ -147,7 +147,7 @@ class FaultPlan:
         )
 
     @classmethod
-    def none(cls) -> "FaultPlan":
+    def none(cls) -> FaultPlan:
         return cls()
 
     @property
@@ -183,7 +183,7 @@ class FaultPlan:
         rng = np.random.default_rng([self.seed, tag, *map(int, coords)])
         return float(rng.random())
 
-    def armed(self) -> "ArmedFaults":
+    def armed(self) -> ArmedFaults:
         """Stateful per-run view (scheduled kills are consumed as they fire)."""
         return ArmedFaults(self)
 

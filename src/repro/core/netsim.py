@@ -370,7 +370,7 @@ PLATFORMS = {
 # offense: they bypass the registry and fork "where" from "how much".
 
 
-def resolve_channel(channel: "str | ChannelModel") -> ChannelModel:
+def resolve_channel(channel: str | ChannelModel) -> ChannelModel:
     """Channel-name compat shim: the only sanctioned string->channel map."""
     if isinstance(channel, ChannelModel):
         return channel
@@ -382,16 +382,30 @@ def resolve_channel(channel: "str | ChannelModel") -> ChannelModel:
         ) from None
 
 
+def resolve_platform(platform: str | PlatformModel) -> PlatformModel:
+    """Platform-name compat shim: the only sanctioned string->platform map
+    (the Table I size variants have no registered provider of their own, so
+    callers sweeping them resolve here instead of subscripting the table)."""
+    if isinstance(platform, PlatformModel):
+        return platform
+    try:
+        return PLATFORMS[platform]
+    except KeyError:
+        raise ValueError(
+            f"unknown platform {platform!r}; options: {sorted(PLATFORMS)}"
+        ) from None
+
+
 # derived profiles (e.g. aws-lambda forced onto its redis staging channel)
 # are interned here so repeated resolution returns the identical object
 _DERIVED: dict[tuple, ProviderProfile] = {}
 
 
 def resolve_provider(
-    provider: "str | ProviderProfile | None" = None,
+    provider: str | ProviderProfile | None = None,
     *,
     platform: PlatformModel | None = None,
-    channel: "str | ChannelModel | None" = None,
+    channel: str | ChannelModel | None = None,
     channel_env: str | None = None,
 ) -> ProviderProfile:
     """Resolve "where this runs" to a canonical :class:`ProviderProfile`.

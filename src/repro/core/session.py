@@ -39,7 +39,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import TYPE_CHECKING, Iterable
+from collections.abc import Iterable
+from typing import TYPE_CHECKING
 
 from repro.core import algorithms, nat, netsim
 
@@ -325,7 +326,7 @@ class CommSession:
     @classmethod
     def all_direct(
         cls, world: int, channel: netsim.ChannelModel | None = None
-    ) -> "CommSession":
+    ) -> CommSession:
         """Implicit compatibility session: every pair direct on ``channel``,
         no bootstrap events — ``Communicator(world_size=P)`` builds one of
         these, so pre-session code prices bit-identically."""
@@ -338,7 +339,7 @@ class CommSession:
         world: int,
         fabric: Fabric | str = "lambda",
         server: nat.RendezvousServer | None = None,
-    ) -> "CommSession":
+    ) -> CommSession:
         """Run the full rendezvous lifecycle (paper Fig 5) and price it.
 
         1. every worker registers: atomic rank assignment + NAT table entry;
@@ -532,7 +533,7 @@ class CommSession:
     def attach_tracer(
         self,
         tracer,
-        ranks: "tuple[int, ...] | None" = None,
+        ranks: tuple[int, ...] | None = None,
         mirror: bool = True,
         backfill: bool = True,
     ):
@@ -576,7 +577,7 @@ class CommSession:
 
     # -- handles --------------------------------------------------------------
 
-    def communicator(self, algorithm: str = "auto") -> "Communicator":
+    def communicator(self, algorithm: str = "auto") -> Communicator:
         """Root communicator over the whole session (use ``.split`` for
         sub-groups per mesh axis)."""
         from repro.core.communicator import Communicator

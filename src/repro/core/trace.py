@@ -39,7 +39,8 @@ chain (per superstep when spans carry ``step`` metadata).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from collections.abc import Iterable
+from typing import Any
 
 LANES = ("compute", "comm", "store", "bootstrap", "overhead")
 
@@ -50,6 +51,34 @@ _EPS = 1e-9
 
 class TraceError(ValueError):
     """A span violated lane-exclusive / monotone scheduling."""
+
+
+# ---------------------------------------------------------------------------
+# audit sinks — how the sanitizers see every tracer that gets built
+# ---------------------------------------------------------------------------
+#
+# ``repro.analysis`` (the tracecheck sanitizer), the pytest autouse fixture
+# in tests/conftest.py and ``benchmarks/run.py --sanitize`` all need "every
+# Tracer this process constructs" without threading a handle through every
+# layer.  A sink is any callable taking the new Tracer; registration is
+# process-global and cheap (one list append per Tracer.__init__).
+
+_audit_sinks: list = []
+
+
+def register_audit_sink(sink) -> None:
+    """Call ``sink(tracer)`` for every :class:`Tracer` constructed from now
+    on (sanitizer hook; pair with :func:`unregister_audit_sink`)."""
+    _audit_sinks.append(sink)
+
+
+def unregister_audit_sink(sink) -> None:
+    """Remove a sink registered via :func:`register_audit_sink` (no-op when
+    it was already removed)."""
+    try:
+        _audit_sinks.remove(sink)
+    except ValueError:
+        pass
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +115,15 @@ class Tracer:
     def __init__(self):
         self.spans: list[Span] = []
         self._cursor: dict[tuple[int, str], float] = {}
+        # event-sequence counter: every group-synchronized event (one
+        # CommEvent mirrored to all its ranks, one BSP barrier, ...) stamps
+        # the same ``eseq`` into each of its per-rank spans, so an exported
+        # timeline keeps the event<->span linkage the tracecheck race
+        # detector groups on (heuristic grouping is the fallback for
+        # pre-linkage artifacts)
+        self._next_eseq = 0
+        for _sink in list(_audit_sinks):
+            _sink(self)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -102,6 +140,14 @@ class Tracer:
         """Earliest instant every listed rank's ``lane`` is free — where a
         synchronizing event (a collective) can start."""
         return max((self.lane_end(r, lane) for r in ranks), default=0.0)
+
+    def next_event_seq(self) -> int:
+        """Allot one event-sequence id (the span-group linkage key): every
+        per-rank span mirrored from the same synchronizing event carries the
+        same ``eseq`` meta value."""
+        seq = self._next_eseq
+        self._next_eseq += 1
+        return seq
 
     def span(
         self,
@@ -164,6 +210,7 @@ class Tracer:
         ranks = [int(r) for r in ranks]
         if t0 is None:
             t0 = self.group_free_at(ranks, lane)
+        seq = self.next_event_seq()
         out = []
         for r in ranks:
             out.append(self.span(
@@ -171,7 +218,7 @@ class Tracer:
                 t0=max(t0, self.lane_end(r, lane)),
                 duration_s=ev.time_s, nbytes=ev.total_bytes,
                 algo=ev.algo, relay=ev.relay, relayed_pairs=ev.relayed_pairs,
-                world=ev.world,
+                world=ev.world, eseq=seq,
             ))
         return out
 
@@ -259,7 +306,7 @@ class Tracer:
         }
 
     @classmethod
-    def from_json(cls, payload: dict) -> "Tracer":
+    def from_json(cls, payload: dict) -> Tracer:
         """Rebuild a tracer from :meth:`to_json` output, re-validating the
         lane invariants (a hand-edited timeline that overlaps fails here)."""
         tr = cls()
@@ -270,6 +317,13 @@ class Tracer:
                 nbytes=d.get("nbytes", 0), usd=d.get("usd", 0.0),
                 **d.get("meta", {}),
             )
+        # resume the event-sequence linkage past the imported groups, so
+        # events ingested after a round-trip cannot collide with them
+        seqs = [
+            d["meta"]["eseq"] for d in spans
+            if "eseq" in d.get("meta", {})
+        ]
+        tr._next_eseq = max(seqs, default=-1) + 1
         return tr
 
     def to_chrome(self) -> dict:

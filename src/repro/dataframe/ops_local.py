@@ -12,7 +12,7 @@ segment reductions (``repro.kernels.segment_reduce``).
 
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ every operator masks by `count`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping
+from collections.abc import Iterable, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +60,7 @@ class Table:
     @classmethod
     def from_dict(
         cls, data: Mapping[str, np.ndarray], capacity: int | None = None
-    ) -> "Table":
+    ) -> Table:
         arrays = {k: np.asarray(v) for k, v in data.items()}
         lengths = {v.shape[0] for v in arrays.values()}
         if len(lengths) != 1:
@@ -76,7 +76,7 @@ class Table:
         return cls(cols, jnp.asarray(n, jnp.int32))
 
     @classmethod
-    def empty_like(cls, other: "Table", capacity: int | None = None) -> "Table":
+    def empty_like(cls, other: Table, capacity: int | None = None) -> Table:
         cap = capacity or other.capacity
         cols = {
             k: jnp.zeros((cap,) + v.shape[1:], v.dtype)
@@ -120,29 +120,29 @@ class Table:
 
     # -- relational basics (all jit-safe) --------------------------------------
 
-    def project(self, names: Iterable[str]) -> "Table":
+    def project(self, names: Iterable[str]) -> Table:
         return Table({n: self.columns[n] for n in names}, self.count)
 
-    def with_column(self, name: str, values: jax.Array) -> "Table":
+    def with_column(self, name: str, values: jax.Array) -> Table:
         if values.shape[0] != self.capacity:
             raise ValueError("column capacity mismatch")
         cols = dict(self.columns)
         cols[name] = values
         return Table(cols, self.count)
 
-    def gather(self, idx: jax.Array, new_count: jax.Array) -> "Table":
+    def gather(self, idx: jax.Array, new_count: jax.Array) -> Table:
         """Reorder/select rows by index (out-of-range drops are caller's job)."""
         cols = {k: jnp.take(v, idx, axis=0, mode="clip") for k, v in self.columns.items()}
         return Table(cols, jnp.asarray(new_count, jnp.int32))
 
-    def filter(self, pred: jax.Array) -> "Table":
+    def filter(self, pred: jax.Array) -> Table:
         """Keep rows where `pred` (and valid); result is packed to the front."""
         keep = pred & self.valid_mask()
         # stable pack: order by (not keep), preserving row order inside groups
         order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)
         return self.gather(order, jnp.sum(keep.astype(jnp.int32)))
 
-    def head(self, n: int) -> "Table":
+    def head(self, n: int) -> Table:
         cols = {k: v[:n] for k, v in self.columns.items()}
         return Table(cols, jnp.minimum(self.count, n).astype(jnp.int32))
 

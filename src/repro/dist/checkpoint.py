@@ -37,7 +37,8 @@ import itertools
 import json
 import math
 from pathlib import Path
-from typing import Any, Mapping
+from collections.abc import Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -55,7 +55,7 @@ import os
 import shutil
 import uuid
 from pathlib import Path
-from typing import Mapping
+from collections.abc import Mapping
 
 from repro.core import netsim
 from repro.core.cost_model import S3_USD_PER_GET, S3_USD_PER_PUT

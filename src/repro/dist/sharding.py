@@ -268,7 +268,7 @@ def repartition_states(states: list, new_world: int) -> list:
     if all(isinstance(s, np.ndarray) for s in states):
         flat = np.concatenate([np.atleast_1d(s) for s in states], axis=0)
         return list(np.array_split(flat, new_world, axis=0))
-    if all(isinstance(s, (list, tuple)) for s in states):
+    if all(isinstance(s, list | tuple) for s in states):
         flat = [x for s in states for x in s]
         bounds = np.linspace(0, len(flat), new_world + 1).astype(int)
         return [flat[bounds[i]:bounds[i + 1]] for i in range(new_world)]

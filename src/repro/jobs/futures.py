@@ -16,7 +16,8 @@ exception, mirroring ``concurrent.futures`` semantics.
 
 from __future__ import annotations
 
-from typing import Any, Iterable, Sequence
+from collections.abc import Iterable, Sequence
+from typing import Any
 
 ANY_COMPLETED = "ANY_COMPLETED"
 ALL_COMPLETED = "ALL_COMPLETED"
@@ -109,7 +110,7 @@ def wait(
     return done, not_done
 
 
-def get_result(fs: "Future | Sequence[Future]") -> Any:
+def get_result(fs: Future | Sequence[Future]) -> Any:
     """Results in task order (one future -> its bare result).  The first
     failed task re-raises its exception, like ``Future.result``."""
     if isinstance(fs, Future):

@@ -17,7 +17,7 @@ exactly — every byte of every object is in exactly one partition.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

@@ -172,7 +172,7 @@ def run_cell(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+    if isinstance(cost, list | tuple):  # older jax wraps the dict in a list
         cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = hlo_analysis.analyze(hlo, chips)
@@ -196,7 +196,7 @@ def run_cell(
                 + getattr(mem, "temp_size_in_bytes", 0)
             ),
         },
-        cost_analysis={k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        cost_analysis={k: float(v) for k, v in cost.items() if isinstance(v, int | float)},
         collectives={"counts": stats.collective_counts,
                      "wire_bytes": int(stats.collective_wire_bytes),
                      "by_kind": stats.collective_by_kind},

@@ -169,7 +169,7 @@ class ArchConfig:
         active_experts = self.num_layers * self.experts_per_token * 3 * d * self.moe_d_ff
         return int(full - all_experts + active_experts)
 
-    def reduced(self, **overrides) -> "ArchConfig":
+    def reduced(self, **overrides) -> ArchConfig:
         """Tiny same-family config for CPU smoke tests."""
         small = dict(
             num_layers=min(self.num_layers, 4 if not self.block_pattern else 2 * max(1, len(self.block_pattern))),

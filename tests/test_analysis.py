@@ -1,0 +1,421 @@
+"""Sanitizers (ISSUE 10): tracecheck seeded-corruption + lintcheck rules.
+
+Two halves mirror the two engines in :mod:`repro.analysis`:
+
+- **tracecheck**: every seeded-corruption class — swapped span times,
+  dropped $-entries, reordered collective ranks, an inflated lane —
+  mutates a known-good timeline and must be caught with its rule code;
+  plus a no-false-positive pass over both shipped ``trace_*_sample.json``
+  artifacts and toy-scale runs of all 8 BENCH-producing scenario families
+  (the full-scale pass runs in CI via ``benchmarks/run.py --sanitize``).
+- **lintcheck**: each RPA rule fires on a minimal snippet, ``noqa``
+  waivers suppress, and — the acceptance criterion — the shipped ``src/``
+  tree lints clean.
+"""
+
+import copy
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis import lintcheck
+from repro.core import bsp, faults, netsim
+from repro.core.communicator import CollectiveKind, CommEvent, Communicator
+from repro.core.cost_model import heterogeneous_run_cost
+from repro.core.session import CommSession, hybrid_session
+from repro.core.trace import Tracer
+from repro.dist.object_store import S3Store
+from repro.jobs import JobExecutor, SpeculationPolicy
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SAMPLE_TRACES = (
+    REPO / "experiments" / "trace_overlap_sample.json",
+    REPO / "experiments" / "trace_chaos_recovery_sample.json",
+)
+
+
+def _codes(violations):
+    return {v.rule for v in violations}
+
+
+def _sum_step(rank, state, comm, world):
+    if rank == 0:
+        xs = [np.ones(256, dtype=np.float32) * (r + 1) for r in range(world)]
+        comm.allreduce(xs)
+    return state + 1.0
+
+
+@pytest.fixture(scope="module")
+def shrink_run(tmp_path_factory):
+    """World-8 checkpointed run that loses two ranks and shrinks: the
+    known-good timeline the corruption tests mutate."""
+    store = tmp_path_factory.mktemp("ckpt")
+    rt = bsp.BSPRuntime(8, provider="aws-lambda", checkpoint_dir=store)
+    plan = faults.FaultPlan(seed=7, rank_losses=((2, 6), (2, 7)))
+    init = [np.zeros(4, dtype=np.float32) for _ in range(8)]
+    _, report = rt.run(
+        [("s", _sum_step)] * 4, init,
+        faults=plan, recovery_policy="shrink",
+    )
+    return rt, report
+
+
+@pytest.fixture(scope="module")
+def jobs_run():
+    ex = JobExecutor(workers=4, provider="aws-lambda")
+    fut = ex.map_reduce(
+        lambda x: x * x, list(range(12)), lambda xs: sum(xs))
+    assert fut.result() == sum(x * x for x in range(12))
+    return ex, fut.job
+
+
+class TestSeededCorruption:
+    """Each mutation class must be caught with its rule code."""
+
+    def test_baseline_is_clean(self, shrink_run):
+        rt, report = shrink_run
+        assert analysis.check_trace(
+            rt.tracer, session=rt.session, report=report) == []
+
+    def test_swap_two_span_times(self, shrink_run):
+        """Swapping the end times of two consecutive spans on one lane
+        breaks exclusivity (RPT001)."""
+        payload = copy.deepcopy(shrink_run[0].tracer.to_json())
+        lanes = {}
+        for s in payload["spans"]:
+            lanes.setdefault((s["rank"], s["lane"]), []).append(s)
+        pair = None
+        for ss in lanes.values():
+            ss.sort(key=lambda s: s["t0"])
+            pair = next(
+                ((a, b) for a, b in zip(ss, ss[1:])
+                 if a["t0"] < a["t1"] <= b["t0"] < b["t1"]
+                 and b["t0"] > a["t0"]),
+                None,
+            )
+            if pair:
+                break
+        assert pair is not None
+        a, b = pair
+        a["t1"], b["t1"] = b["t1"], a["t1"]
+        assert "RPT001" in _codes(analysis.check_trace(payload))
+
+    def test_reorder_collective_ranks(self, shrink_run):
+        """Giving one rank an earlier interval for a collective than any
+        peer's entry is a happens-before violation (RPT004)."""
+        payload = copy.deepcopy(shrink_run[0].tracer.to_json())
+        comm = [s for s in payload["spans"]
+                if s["lane"] == "comm" and s["kind"] == "allreduce"]
+        target = comm[0]
+        shift = (target["t1"] - target["t0"]) + 1.0
+        target["t0"] -= shift
+        target["t1"] -= shift
+        assert "RPT004" in _codes(analysis.check_trace(payload))
+
+    def test_barrier_exits_before_slowest_entrant(self, shrink_run):
+        payload = copy.deepcopy(shrink_run[0].tracer.to_json())
+        bars = [s for s in payload["spans"] if s["kind"] == "barrier"]
+        assert bars, "the BSP run emits barrier spans"
+        bars[0]["t0"] -= 5.0
+        bars[0]["t1"] -= 5.0
+        assert "RPT005" in _codes(analysis.check_trace(payload))
+
+    def test_inflate_one_lane_times(self, shrink_run):
+        """Scaling one rank's comm lane desynchronizes its collectives from
+        every peer (RPT004)."""
+        payload = copy.deepcopy(shrink_run[0].tracer.to_json())
+        for s in payload["spans"]:
+            if s["rank"] == 1 and s["lane"] == "comm":
+                s["t0"] *= 3.0
+                s["t1"] *= 3.0
+        assert "RPT004" in _codes(analysis.check_trace(payload))
+
+    def test_drop_dollar_entry(self, jobs_run):
+        """Zeroing one billed attempt breaks lane-vs-billed conservation
+        (RPT008)."""
+        ex, job = jobs_run
+        payload = copy.deepcopy(ex.tracer.to_json())
+        billed = next(
+            s for s in payload["spans"]
+            if s["usd"] > 0 and s["meta"].get("job") == job.job_id)
+        billed["usd"] = 0.0
+        assert "RPT008" in _codes(
+            analysis.check_trace(payload, job=job))
+
+    def test_inflate_one_lane_dollars(self, jobs_run):
+        ex, job = jobs_run
+        payload = copy.deepcopy(ex.tracer.to_json())
+        billed = next(
+            s for s in payload["spans"]
+            if s["usd"] > 0 and s["meta"].get("job") == job.job_id)
+        billed["usd"] *= 10.0
+        assert "RPT008" in _codes(
+            analysis.check_trace(payload, job=job))
+
+    def test_restore_before_publish(self, shrink_run):
+        """Moving a checkpoint GET before its PUT's commit is RPT006."""
+        payload = copy.deepcopy(shrink_run[0].tracer.to_json())
+        puts = {s["meta"].get("key"): s["t1"] for s in payload["spans"]
+                if s["lane"] == "store" and s["kind"] == "put"}
+        get = next(
+            s for s in payload["spans"]
+            if s["lane"] == "store" and s["kind"] == "get"
+            and s["meta"].get("key") in puts)
+        width = get["t1"] - get["t0"]
+        get["t0"] = puts[get["meta"]["key"]] - 10.0
+        get["t1"] = get["t0"] + width
+        assert "RPT006" in _codes(analysis.check_trace(payload))
+
+    def test_negative_accounting_and_bad_lane(self):
+        spans = [
+            {"rank": 0, "lane": "compute", "t0": 0.0, "t1": 1.0,
+             "kind": "x", "usd": -0.5},
+            {"rank": 0, "lane": "warp", "t0": 0.0, "t1": 1.0, "kind": "y"},
+            {"rank": 1, "lane": "compute", "t0": 2.0, "t1": 1.0, "kind": "z"},
+        ]
+        codes = _codes(analysis.check_trace(spans))
+        assert {"RPT007", "RPT003", "RPT002"} <= codes
+
+    def test_wire_exceeds_logical_bytes(self):
+        good = CommEvent(
+            CollectiveKind.ALLREDUCE, 4, 100, 1.0, raw_bytes=200)
+        bad = CommEvent(
+            CollectiveKind.ALLREDUCE, 4, 300, 1.0, raw_bytes=200)
+        assert analysis.check_events([good]) == []
+        assert "RPT009" in _codes(analysis.check_events([bad]))
+
+    def test_event_sanity(self):
+        bad = CommEvent(CollectiveKind.BARRIER, 0, 0, -1.0)
+        assert "RPT011" in _codes(analysis.check_events([bad]))
+
+    def test_evicted_spend_resurrected(self, shrink_run):
+        """Moving evicted dollars back into a surviving rank keeps the sum
+        identity but breaks the eviction recomputation (RPT010)."""
+        rt, report = shrink_run
+        cost = heterogeneous_run_cost(report, rt.session)
+        assert cost["evicted_usd"] > 0
+        assert analysis.check_run_cost(report, rt.session, cost) == []
+        resurrected = dict(cost)
+        per_rank = list(cost["per_rank_usd"])
+        per_rank[0] += cost["evicted_usd"]
+        resurrected["per_rank_usd"] = per_rank
+        resurrected["evicted_usd"] = 0.0
+        assert "RPT010" in _codes(
+            analysis.check_run_cost(report, rt.session, resurrected))
+
+    def test_total_identity_broken(self, shrink_run):
+        rt, report = shrink_run
+        cost = dict(heterogeneous_run_cost(report, rt.session))
+        cost["total_usd"] += 1.0
+        assert "RPT008" in _codes(
+            analysis.check_run_cost(report, rt.session, cost))
+
+
+class TestNoFalsePositives:
+    """Clean timelines from every BENCH-producing scenario family."""
+
+    @pytest.mark.parametrize(
+        "artifact", SAMPLE_TRACES, ids=lambda p: p.stem)
+    def test_shipped_sample_traces_are_clean(self, artifact):
+        payload = json.loads(artifact.read_text())
+        assert analysis.check_trace(payload) == []
+        # and the artifact round-trips through the tracer's own validation
+        assert analysis.check_trace(Tracer.from_json(payload)) == []
+
+    def test_collective_algos_family(self):
+        # tuned vs fixed engines over a traced session (BENCH_collective_algos)
+        for algorithm in ("auto", "fixed"):
+            comm = Communicator(4, algorithm=algorithm)
+            tr = comm.session.attach_tracer(Tracer(), backfill=True)
+            xs = [np.ones(2048, dtype=np.float32)] * 4
+            comm.allreduce(xs)
+            comm.alltoallv([[np.ones(64, dtype=np.float32)] * 4] * 4)
+            comm.barrier()
+            assert analysis.check_trace(tr, events=comm.session.events) == []
+
+    def test_shuffle_compression_family(self):
+        # the compressed wire codec (BENCH_shuffle_compression)
+        from repro.dist import compression
+
+        comm = Communicator(4)
+        tr = comm.session.attach_tracer(Tracer(), backfill=True)
+        blk = compression.encode_block(
+            {"k": np.arange(128, dtype=np.int32)}, {"k"})
+        comm.compressed_alltoallv([[blk] * 4] * 4)
+        assert analysis.check_trace(tr, events=comm.session.events) == []
+
+    def test_hybrid_links_family(self):
+        # relayed pairs gate pricing (BENCH_hybrid_links)
+        sess = hybrid_session(4, [(0, 1)])
+        tr = sess.attach_tracer(Tracer(), backfill=True)
+        comm = Communicator(session=sess)
+        comm.allreduce([np.ones(1024, dtype=np.float32)] * 4)
+        assert analysis.check_trace(tr, events=sess.events) == []
+
+    def test_ckpt_store_family(self, tmp_path):
+        # priced S3 store, full + ranged restore (BENCH_ckpt_store)
+        store = S3Store()
+        tr = Tracer()
+        store.attach_tracer(tr)
+        store.put_objects_atomic(
+            "g", {"obj": np.arange(4096, dtype=np.float32).tobytes()})
+        store.get_object("g", "obj")
+        assert analysis.check_trace(tr) == []
+
+    def test_provider_placement_family(self):
+        # burst expand over a live world (BENCH_provider_placement)
+        sess = CommSession.bootstrap(4, "aws-lambda")
+        tr = sess.attach_tracer(Tracer(), backfill=True)
+        sess.expand(2, provider="gcp-cloudrun")
+        comm = Communicator(session=sess)
+        comm.allreduce([np.ones(256, dtype=np.float32)] * 6)
+        assert analysis.check_trace(tr, events=sess.events) == []
+
+    def test_jobs_family(self):
+        # speculation under stragglers (BENCH_jobs)
+        plan = faults.FaultPlan(seed=3, straggle_s=4.0, straggle_rate=0.3)
+        ex = JobExecutor(
+            workers=4, provider="aws-lambda",
+            speculation=SpeculationPolicy())
+        futs = ex.map(lambda x: x + 1, list(range(16)), faults=plan)
+        assert [f.result() for f in futs] == list(range(1, 17))
+        assert analysis.check_trace(ex.tracer, job=futs[0].job) == []
+
+    def test_overlap_family(self):
+        # double-buffered supersteps (BENCH_overlap)
+        rt = bsp.BSPRuntime(4, provider="aws-lambda")
+        init = [np.zeros(4, dtype=np.float32) for _ in range(4)]
+        rt.run([("s", _sum_step)] * 3, init, overlap=True)
+        assert analysis.check_trace(rt.tracer, session=rt.session) == []
+
+    def test_chaos_recovery_family(self, shrink_run):
+        # fault domains + shrink (BENCH_chaos_recovery)
+        rt, report = shrink_run
+        cost = heterogeneous_run_cost(report, rt.session)
+        assert analysis.check_trace(
+            rt.tracer, session=rt.session, report=report, cost=cost) == []
+
+
+class TestEventSpanLinkage:
+    """The eseq causal-edge export the race detector groups on."""
+
+    def test_ingest_stamps_shared_eseq(self):
+        tr = Tracer()
+        ev = CommEvent(CollectiveKind.ALLREDUCE, 3, 64, 0.5)
+        spans = tr.ingest_comm_event(ev, range(3))
+        seqs = {s.meta_dict["eseq"] for s in spans}
+        assert len(seqs) == 1
+        spans2 = tr.ingest_comm_event(ev, range(3))
+        assert spans2[0].meta_dict["eseq"] != spans[0].meta_dict["eseq"]
+
+    def test_from_json_resumes_eseq_counter(self):
+        tr = Tracer()
+        ev = CommEvent(CollectiveKind.ALLREDUCE, 2, 64, 0.5)
+        tr.ingest_comm_event(ev, range(2))
+        clone = Tracer.from_json(tr.to_json())
+        spans = clone.ingest_comm_event(ev, range(2))
+        seqs = {s["meta"]["eseq"] for s in clone.to_json()["spans"]}
+        assert len(seqs) == 2
+        assert spans[0].meta_dict["eseq"] == 1
+
+    def test_linked_groups_catch_what_heuristics_see(self):
+        """The same desync mutation is caught with and without linkage."""
+        tr = Tracer()
+        ev = CommEvent(CollectiveKind.ALLREDUCE, 4, 64, 1.0)
+        tr.ingest_comm_event(ev, range(4))
+        payload = tr.to_json()
+        stripped = copy.deepcopy(payload)
+        for s in stripped["spans"]:
+            s["meta"].pop("eseq")
+        for p in (payload, stripped):
+            p["spans"][0]["t0"] -= 10.0
+            p["spans"][0]["t1"] -= 10.0
+            assert "RPT004" in _codes(analysis.check_trace(p))
+
+
+# ---------------------------------------------------------------------------
+# lintcheck
+# ---------------------------------------------------------------------------
+
+MODELED = "src/repro/core/x.py"
+OUTSIDE = "benchmarks/x.py"
+
+
+def _lint(src, path=MODELED):
+    return {v.rule for v in lintcheck.lint_source(src, path)}
+
+
+class TestLintRules:
+    def test_wall_clock_in_modeled_code(self):
+        assert "RPA001" in _lint("import time\nt = time.perf_counter()\n")
+        assert "RPA001" in _lint(
+            "from time import perf_counter\nt = perf_counter()\n")
+        assert "RPA001" in _lint(
+            "from datetime import datetime\nd = datetime.now()\n")
+        # outside modeled packages the rule is silent
+        assert _lint("import time\nt = time.time()\n", OUTSIDE) == set()
+
+    def test_rng_without_seed(self):
+        assert "RPA002" in _lint(
+            "import numpy as np\nr = np.random.default_rng()\n")
+        assert "RPA002" in _lint("import random\nx = random.random()\n")
+        assert _lint(
+            "import numpy as np\nr = np.random.default_rng(7)\n") == set()
+
+    def test_channel_env_call_site(self):
+        src = "resolve_provider(channel_env='redis')\n"
+        assert "RPA003" in _lint(src, OUTSIDE)
+        assert _lint(src, "src/repro/core/netsim.py") == set()
+
+    def test_direct_table_subscripts(self):
+        assert "RPA004" in _lint("c = CHANNELS['redis']\n", OUTSIDE)
+        assert "RPA004" in _lint("p = netsim.PLATFORMS['x']\n", OUTSIDE)
+        assert _lint(
+            "c = CHANNELS['redis']\n", "src/repro/core/netsim.py") == set()
+
+    def test_unpriced_comm_event(self):
+        assert "RPA005" in _lint("ev = CommEvent(k, 4, 64, 1.5)\n", OUTSIDE)
+        assert "RPA005" in _lint(
+            "ev = CommEvent(k, 4, 64, time_s=2.0)\n", OUTSIDE)
+        assert _lint("ev = CommEvent(k, 4, 64, priced_t)\n", OUTSIDE) == set()
+        # zero is the no-op event, not a hand-priced one
+        assert _lint("ev = CommEvent(k, 4, 64, 0.0)\n", OUTSIDE) == set()
+
+    def test_mutable_dataclass_default(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass\n"
+            "class C:\n"
+            "    xs: list = []\n"
+        )
+        assert "RPA006" in _lint(src, OUTSIDE)
+        ok = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass\n"
+            "class C:\n"
+            "    xs: tuple = ()\n"
+        )
+        assert _lint(ok, OUTSIDE) == set()
+
+    def test_bare_except(self):
+        src = "try:\n    x = 1\nexcept:\n    pass\n"
+        assert "RPA007" in _lint(src, OUTSIDE)
+        ok = "try:\n    x = 1\nexcept ValueError:\n    pass\n"
+        assert _lint(ok, OUTSIDE) == set()
+
+    def test_noqa_suppression(self):
+        src = "import time\nt = time.perf_counter()  # noqa: RPA001\n"
+        assert _lint(src) == set()
+        src = "import time\nt = time.perf_counter()  # noqa\n"
+        assert _lint(src) == set()
+        # a noqa for a different rule does not suppress
+        src = "import time\nt = time.perf_counter()  # noqa: RPA002\n"
+        assert "RPA001" in _lint(src)
+
+    def test_src_tree_lints_clean(self):
+        """The acceptance criterion: check_invariants exits 0 on src/."""
+        violations = lintcheck.lint_paths([REPO / "src"])
+        assert violations == [], "\n".join(str(v) for v in violations)
